@@ -1,0 +1,27 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    ARCH_REGISTRY,
+    SHAPES,
+    ModelConfig,
+    RunConfig,
+    ShapeSpec,
+    all_configs,
+    get_config,
+    register,
+    shape_applicable,
+    smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "ARCH_REGISTRY",
+    "SHAPES",
+    "ModelConfig",
+    "RunConfig",
+    "ShapeSpec",
+    "all_configs",
+    "get_config",
+    "register",
+    "shape_applicable",
+    "smoke_config",
+]

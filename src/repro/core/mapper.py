@@ -1,0 +1,1043 @@
+"""Modulo scheduling / place & route on the MRRG (Track A).
+
+Implements the paper's compiler stack:
+
+* :class:`MRRG` — time-extended modulo routing resource graph with net-aware
+  capacity bookkeeping (same-net reuse is free, as in PathFinder).
+* :func:`route_edge` — elapsed-time Dijkstra/DP from a producer's output
+  resources to a resource the consumer's operand mux can read, arriving at
+  exactly the consumer's issue cycle (holdable resources may buffer).
+* :class:`HierarchicalMapper` — **Algorithm 2**: motifs sorted by dependency,
+  placed whole onto PCUs with the paper's flexible schedule templates
+  (§5.2, Fig. 11), simulated-annealing moves over whole motifs, Dijkstra
+  routing, II incremented until a valid mapping exists.
+* :class:`SAMapper` — the node-level simulated-annealing baseline.
+* :class:`PathFinderMapper` — the negotiated-congestion baseline.
+
+All latencies are 1 cycle; a value produced at t is readable at t+1 from the
+producer's output register / local router (Plaid collects ALU outputs into
+the collective router directly) / own output ports (ST writes straight to
+port registers) — see ``start_resources``.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.arch import Arch, FU
+from repro.core.dfg import DFG, Edge
+from repro.core.motifs import Motif
+
+BIG = 1e9
+
+
+# ---------------------------------------------------------------------------
+# MRRG with net-aware reservations
+# ---------------------------------------------------------------------------
+
+
+class MRRG:
+    def __init__(self, arch: Arch, ii: int):
+        self.arch = arch
+        self.ii = ii
+        # (rid, cyc) -> {(net, abs_t): refcount}. Sharing is legal only for
+        # the SAME VALUE: same net at the same absolute cycle. The same net
+        # at a different absolute cycle on the same modulo slot is a
+        # different iteration's value — a collision, not a share.
+        self.res: Dict[Tuple[int, int], Dict[Tuple[int, int], int]] = {}
+        self.fu_busy: Dict[Tuple[int, int], int] = {}  # (fu, cyc) -> node
+        self.history: Dict[Tuple[int, int], float] = {}  # PathFinder history cost
+
+    def cyc(self, t: int) -> int:
+        return t % self.ii
+
+    # -- FU slots ----------------------------------------------------------
+    def fu_free(self, fu: int, t: int) -> bool:
+        return (fu, self.cyc(t)) not in self.fu_busy
+
+    def take_fu(self, fu: int, t: int, node: int):
+        key = (fu, self.cyc(t))
+        assert key not in self.fu_busy, (key, node)
+        self.fu_busy[key] = node
+
+    def free_fu(self, fu: int, t: int):
+        self.fu_busy.pop((fu, self.cyc(t)), None)
+
+    # -- routing resources ---------------------------------------------------
+    def occ(self, rid: int, t: int) -> int:
+        return len(self.res.get((rid, self.cyc(t)), ()))
+
+    def rcost(self, rid: int, t: int, net: int, allow_overuse: bool) -> float:
+        node = self.arch.rnodes[rid]
+        key = (rid, self.cyc(t))
+        vals = self.res.get(key, {})
+        if (net, t) in vals:
+            return 0.05  # same value reuse (fan-out) is nearly free
+        over = len(vals) + 1 - node.cap
+        base = 1.0 + self.history.get(key, 0.0)
+        if over > 0:
+            if not allow_overuse:
+                return BIG
+            base += 8.0 * over
+        return base
+
+    def reserve(self, net: int, path: Sequence[Tuple[int, int]]):
+        for rid, t in path:
+            d = self.res.setdefault((rid, self.cyc(t)), {})
+            d[(net, t)] = d.get((net, t), 0) + 1
+
+    def release(self, net: int, path: Sequence[Tuple[int, int]]):
+        for rid, t in path:
+            key = (rid, self.cyc(t))
+            d = self.res.get(key)
+            if d is not None and (net, t) in d:
+                d[(net, t)] -= 1
+                if d[(net, t)] <= 0:
+                    del d[(net, t)]
+                if not d:
+                    del self.res[key]
+
+    def overused(self) -> List[Tuple[int, int]]:
+        out = []
+        for (rid, c), nets in self.res.items():
+            if len(nets) > self.arch.rnodes[rid].cap:
+                out.append((rid, c))
+        return out
+
+    def bump_history(self, amount: float = 1.0):
+        for (rid, c), nets in self.res.items():
+            if len(nets) > self.arch.rnodes[rid].cap:
+                key = (rid, c)
+                self.history[key] = self.history.get(key, 0.0) + amount
+
+
+def start_resources(arch: Arch, fu: FU) -> List[int]:
+    """Resources a value produced on ``fu`` reaches one cycle later."""
+    out = [arch.fu_out[fu.id]]
+    for r in arch.rnodes:
+        if r.tile != fu.tile:
+            continue
+        if arch.kind == "plaid":
+            if fu.kind == "alu" and r.kind == "lrouter":
+                out.append(r.id)  # collective router collects ALU outputs
+            if fu.kind == "alsu" and r.kind == "glink":
+                out.append(r.id)
+        else:
+            if r.kind == "port":
+                out.append(r.id)  # ST writes straight to port registers
+    return out
+
+
+def min_span(arch: Arch, src_fu: FU, dst_fu: FU) -> int:
+    """Cheap lower bound on routing latency between two FUs (cycles)."""
+    (x1, y1), (x2, y2) = src_fu.tile, dst_fu.tile
+    d = abs(x1 - x2) + abs(y1 - y2)
+    if arch.kind != "plaid":
+        return max(d, 1)
+    if d == 0:
+        if src_fu.kind == "alsu" and dst_fu.kind == "alsu":
+            return 1
+        if src_fu.kind == "alu" and dst_fu.kind == "alu":
+            return 1
+        return 2
+    # cross-PCU: out-reg (1) + d mesh hops + drop into lrouter/glink (1)
+    return d + 2
+
+
+def route_edge(
+    mrrg: MRRG,
+    net: int,
+    src_fu: FU,
+    dst_fu: FU,
+    t_src: int,
+    t_dst: int,
+    *,
+    allow_overuse: bool = False,
+) -> Optional[Tuple[List[Tuple[int, int]], float]]:
+    """Route one value with modulo-conflict repair: when the min-cost path
+    would occupy one (resource, cycle-mod-II) slot twice (value lifetime >
+    II through a single register), the conflicting slots are masked and the
+    search retried — modulo variable expansion across register chains."""
+    avoid: Set[Tuple[int, int]] = set()
+    for _ in range(4):
+        r = _route_edge_once(
+            mrrg, net, src_fu, dst_fu, t_src, t_dst,
+            allow_overuse=allow_overuse, avoid=avoid,
+        )
+        if r is None:
+            return None
+        path, cost, conflicts = r
+        if not conflicts:
+            return path, cost
+        avoid |= conflicts
+    return None
+
+
+def _route_edge_once(
+    mrrg: MRRG,
+    net: int,
+    src_fu: FU,
+    dst_fu: FU,
+    t_src: int,
+    t_dst: int,
+    *,
+    allow_overuse: bool = False,
+    avoid: Optional[Set[Tuple[int, int]]] = None,
+):
+    arch = mrrg.arch
+    avoid = avoid or set()
+    span = t_dst - t_src
+    if span < 1:
+        return None
+    reads = set(dst_fu.reads)
+    starts = start_resources(arch, src_fu)
+    # DP over elapsed steps 1..span
+    INF = float("inf")
+    cost = {rid: INF for rid in range(len(arch.rnodes))}
+    back: List[Dict[int, Optional[int]]] = [dict() for _ in range(span + 1)]
+    for rid in starts:
+        if (rid, mrrg.cyc(t_src + 1)) in avoid:
+            continue
+        c = mrrg.rcost(rid, t_src + 1, net, allow_overuse)
+        if c < BIG:
+            if c < cost[rid]:
+                cost[rid] = c
+                back[1][rid] = None
+    for k in range(2, span + 1):
+        t = t_src + k
+        ncost = {rid: INF for rid in range(len(arch.rnodes))}
+        for rid, cprev in cost.items():
+            if cprev >= INF:
+                continue
+            node = arch.rnodes[rid]
+            nexts = list(mrrg.arch.redges[rid])
+            if node.holdable:
+                nexts.append(rid)
+            for nxt in nexts:
+                if (nxt, mrrg.cyc(t)) in avoid:
+                    continue
+                c = mrrg.rcost(nxt, t, net, allow_overuse)
+                if c >= BIG:
+                    continue
+                tot = cprev + c
+                if tot < ncost[nxt]:
+                    ncost[nxt] = tot
+                    back[k][nxt] = rid
+        cost = ncost
+        if all(v >= INF for v in cost.values()):
+            return None
+    # arrival: must sit in a readable resource at t_dst
+    best_rid, best_cost = None, INF
+    for rid in reads:
+        if cost.get(rid, INF) < best_cost:
+            best_cost = cost[rid]
+            best_rid = rid
+    if best_rid is None:
+        return None
+    # reconstruct
+    path = []
+    rid = best_rid
+    for k in range(span, 0, -1):
+        path.append((rid, t_src + k))
+        rid = back[k].get(rid)
+        if rid is None and k > 1:
+            return None
+    path.reverse()
+    # self-conflict: same net must not need one (rid, mod) slot twice
+    mods = [(r, mrrg.cyc(t)) for r, t in path]
+    conflicts = {m for m in mods if mods.count(m) > 1}
+    return path, best_cost, conflicts
+
+
+# ---------------------------------------------------------------------------
+# Mapping state shared by all mappers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Mapping:
+    arch: Arch
+    dfg: DFG
+    ii: int
+    place: Dict[int, int] = field(default_factory=dict)  # node -> fu
+    time: Dict[int, int] = field(default_factory=dict)  # node -> abs cycle
+    routes: Dict[int, List[Tuple[int, int]]] = field(default_factory=dict)  # edge idx
+
+    @property
+    def makespan(self) -> int:
+        return (max(self.time.values()) + 1) if self.time else 0
+
+    def cycles(self, iterations: int) -> int:
+        return self.ii * (iterations - 1) + self.makespan
+
+    def validate(self) -> None:
+        dfg, arch = self.dfg, self.arch
+        need = {
+            n for n, node in dfg.nodes.items() if node.op not in ("const", "input")
+        }
+        assert need <= set(self.place), "not all executable nodes placed"
+        busy: Dict[Tuple[int, int], int] = {}
+        for n, fu in self.place.items():
+            t = self.time[n]
+            op = dfg.nodes[n].op
+            fu_obj = arch.fus[fu]
+            exe_ops = fu_obj.ops
+            if op not in ("const", "input", "output"):
+                assert op in exe_ops, (n, op, fu_obj.kind)
+            key = (fu, t % self.ii)
+            assert key not in busy, f"FU conflict {key}: {busy[key]} vs {n}"
+            busy[key] = n
+        # route presence + timing for all intra edges between executable nodes
+        res_occ: Dict[Tuple[int, int], Set[Tuple[int, int]]] = {}
+        for idx, e in enumerate(dfg.edges):
+            if dfg.nodes[e.src].op in ("const", "input"):
+                continue
+            t_dst = self.time[e.dst] + e.distance * self.ii
+            t_src = self.time[e.src]
+            assert t_dst > t_src, f"edge {e} not causal"
+            path = self.routes.get(idx)
+            assert path is not None, f"edge {idx} unrouted"
+            assert path[-1][1] == t_dst, (idx, path[-1], t_dst)
+            assert path[-1][0] in self.arch.fus[self.place[e.dst]].reads
+            for rid, t in path:
+                # distinct VALUES (net, abs cycle) per modulo slot
+                res_occ.setdefault((rid, t % self.ii), set()).add((e.src, t))
+        for (rid, c), nets in res_occ.items():
+            assert len(nets) <= self.arch.rnodes[rid].cap, (
+                f"overuse at {(rid, c)}: {nets}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Base machinery for placement-and-routing mappers
+# ---------------------------------------------------------------------------
+
+
+class _BaseMapper:
+    max_ii = 16
+
+    def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 4000):
+        self.arch = arch
+        self.seed = seed
+        self.time_budget = time_budget  # SA/negotiation step budget per II
+
+    def mii(self, dfg: DFG) -> int:
+        n_comp = len(dfg.compute_nodes)
+        return max(
+            self.arch.res_mii(n_comp, len(dfg.memory_nodes)), dfg.rec_mii()
+        )
+
+    def map(self, dfg: DFG) -> Optional[Mapping]:
+        for ii in range(self.mii(dfg), self.max_ii + 1):
+            m = self.map_at_ii(dfg, ii)
+            if m is not None:
+                return m
+        return None
+
+    # -- helpers -----------------------------------------------------------
+    def _fu_candidates(self, dfg: DFG, n: int) -> List[int]:
+        op = dfg.nodes[n].op
+        out = []
+        for fu in self.arch.fus:
+            if op in ("const", "input", "output") or op in fu.ops:
+                out.append(fu.id)
+        return out
+
+    def _route_node_edges(
+        self, mrrg: MRRG, dfg: DFG, mapping: Mapping, nodes: Set[int], allow_overuse=False
+    ) -> Tuple[bool, float]:
+        """(Re)route all edges touching ``nodes`` whose endpoints are placed."""
+        total = 0.0
+        ok = True
+        for idx, e in enumerate(dfg.edges):
+            if e.src not in nodes and e.dst not in nodes:
+                continue
+            if e.src not in mapping.place or e.dst not in mapping.place:
+                continue
+            if idx in mapping.routes:
+                mrrg.release(e.src, mapping.routes.pop(idx))
+            if dfg.nodes[e.src].op in ("const", "input"):
+                continue
+            t_dst = mapping.time[e.dst] + e.distance * mapping.ii
+            r = route_edge(
+                mrrg, e.src, self.arch.fus[mapping.place[e.src]],
+                self.arch.fus[mapping.place[e.dst]],
+                mapping.time[e.src], t_dst, allow_overuse=allow_overuse,
+            )
+            if r is None:
+                ok = False
+                total += 50.0
+                continue
+            path, c = r
+            mrrg.reserve(e.src, path)
+            mapping.routes[idx] = path
+            total += c
+        return ok, total
+
+    def _unroute_node(self, mrrg: MRRG, dfg: DFG, mapping: Mapping, n: int):
+        for idx, e in enumerate(dfg.edges):
+            if (e.src == n or e.dst == n) and idx in mapping.routes:
+                mrrg.release(e.src, mapping.routes.pop(idx))
+
+
+# ---------------------------------------------------------------------------
+# Node-level SA mapper (baseline; also the spatial engine at II=1)
+# ---------------------------------------------------------------------------
+
+
+class SAMapper(_BaseMapper):
+    """Plain simulated annealing over single-node moves [3, 68, 73]."""
+
+    fixed_ii: Optional[int] = None
+
+    def map(self, dfg: DFG) -> Optional[Mapping]:
+        if self.fixed_ii is not None:
+            return self.map_at_ii(dfg, self.fixed_ii)
+        return super().map(dfg)
+
+    def map_at_ii(self, dfg: DFG, ii: int) -> Optional[Mapping]:
+        rng = random.Random(self.seed + ii * 1337)
+        mrrg = MRRG(self.arch, ii)
+        mapping = Mapping(self.arch, dfg, ii)
+        order = dfg.topo_order()
+        # greedy initial placement
+        for n in order:
+            if not self._greedy_place(mrrg, dfg, mapping, n, rng):
+                pass  # leave unplaced; SA will try
+        unplaced = [n for n in order if n not in mapping.place]
+        cost = self._cost(dfg, mapping, mrrg)
+        temp = 2.0
+        last_gain = 0
+        for step in range(self.time_budget):
+            if not unplaced and not mrrg.overused() and self._all_routed(dfg, mapping):
+                break
+            if step - last_gain > 400:
+                break  # plateau: give up at this II
+            n = rng.choice(unplaced) if unplaced and rng.random() < 0.7 else rng.choice(order)
+            old = (mapping.place.get(n), mapping.time.get(n))
+            self._displace(mrrg, dfg, mapping, n)
+            ok = self._greedy_place(mrrg, dfg, mapping, n, rng, randomize=True)
+            newcost = self._cost(dfg, mapping, mrrg)
+            if newcost < cost:
+                last_gain = step
+            if newcost <= cost or rng.random() < math.exp((cost - newcost) / max(temp, 1e-3)):
+                cost = newcost
+            else:  # revert
+                self._displace(mrrg, dfg, mapping, n)
+                if old[0] is not None:
+                    self._place_at(mrrg, dfg, mapping, n, old[0], old[1])
+            unplaced = [x for x in order if x not in mapping.place]
+            temp *= 0.999
+        if unplaced or mrrg.overused() or not self._all_routed(dfg, mapping):
+            return None
+        mapping.validate()
+        return mapping
+
+    # -- internals ----------------------------------------------------------
+    def _ready_time(self, dfg: DFG, mapping: Mapping, n: int, ii: int) -> int:
+        if not hasattr(self, "_asap_cache") or self._asap_cache[0] is not dfg:
+            self._asap_cache = (dfg, dfg.asap())
+        t = self._asap_cache[1][n]
+        for e in dfg.intra_edges():
+            if e.dst == n and e.src in mapping.time:
+                t = max(t, mapping.time[e.src] + 1)
+        return t
+
+    def _greedy_place(self, mrrg, dfg, mapping, n, rng, randomize=False) -> bool:
+        cands = self._fu_candidates(dfg, n)
+        if randomize:
+            rng.shuffle(cands)
+        ready = self._ready_time(dfg, mapping, n, mapping.ii)
+        best = None
+        for fu in cands:
+            for dt in range(0, mapping.ii + 4):
+                t = ready + dt
+                if not mrrg.fu_free(fu, t):
+                    continue
+                self._place_at(mrrg, dfg, mapping, n, fu, t)
+                ok, c = self._route_node_edges(mrrg, dfg, mapping, {n})
+                if ok and (best is None or c < best[2]):
+                    best = (fu, t, c)
+                self._displace(mrrg, dfg, mapping, n)
+                if best is not None and randomize:
+                    break
+            if best is not None and randomize:
+                break
+        if best is None:
+            return False
+        self._place_at(mrrg, dfg, mapping, n, best[0], best[1])
+        self._route_node_edges(mrrg, dfg, mapping, {n})
+        return True
+
+    def _place_at(self, mrrg, dfg, mapping, n, fu, t):
+        mapping.place[n] = fu
+        mapping.time[n] = t
+        mrrg.take_fu(fu, t, n)
+        self._route_node_edges(mrrg, dfg, mapping, {n})
+
+    def _displace(self, mrrg, dfg, mapping, n):
+        if n in mapping.place:
+            self._unroute_node(mrrg, dfg, mapping, n)
+            mrrg.free_fu(mapping.place[n], mapping.time[n])
+            del mapping.place[n]
+            del mapping.time[n]
+
+    def _all_routed(self, dfg, mapping) -> bool:
+        for idx, e in enumerate(dfg.edges):
+            if dfg.nodes[e.src].op in ("const", "input"):
+                continue
+            if idx not in mapping.routes:
+                return False
+        return True
+
+    def _cost(self, dfg, mapping, mrrg) -> float:
+        unplaced = sum(1 for n in dfg.nodes if n not in mapping.place)
+        unrouted = 0
+        for idx, e in enumerate(dfg.edges):
+            if dfg.nodes[e.src].op in ("const", "input"):
+                continue
+            if e.src in mapping.place and e.dst in mapping.place and idx not in mapping.routes:
+                unrouted += 1
+        over = len(mrrg.overused())
+        rlen = sum(len(p) for p in mapping.routes.values())
+        return 100.0 * unplaced + 40.0 * unrouted + 25.0 * over + 0.1 * rlen
+
+
+# ---------------------------------------------------------------------------
+# PathFinder-style negotiated congestion mapper
+# ---------------------------------------------------------------------------
+
+
+class PathFinderMapper(SAMapper):
+    """Negotiation-based router [38]: placement greedy, then iterative
+    rip-up & re-route with growing history costs; re-place nodes whose
+    edges stay congested."""
+
+    def map_at_ii(self, dfg: DFG, ii: int) -> Optional[Mapping]:
+        rng = random.Random(self.seed + ii * 7331)
+        mrrg = MRRG(self.arch, ii)
+        mapping = Mapping(self.arch, dfg, ii)
+        for n in dfg.topo_order():
+            if not self._greedy_place_overuse(mrrg, dfg, mapping, n, rng):
+                return None
+        for it in range(30):
+            # rip up everything, re-route with current history
+            for idx in list(mapping.routes):
+                mrrg.release(dfg.edges[idx].src, mapping.routes.pop(idx))
+            ok, _ = self._route_node_edges(
+                mrrg, dfg, mapping, set(dfg.nodes), allow_overuse=True
+            )
+            if ok and not mrrg.overused():
+                if self._all_routed(dfg, mapping):
+                    mapping.validate()
+                    return mapping
+            mrrg.bump_history(1.0)
+            # re-place a congested node occasionally
+            if it % 3 == 2:
+                over = mrrg.overused()
+                if over:
+                    rid, c = rng.choice(over)
+                    victims = [
+                        n for n in mapping.place
+                        if any(
+                            (r == rid) for idx2, p in mapping.routes.items()
+                            for (r, tt) in p
+                            if dfg.edges[idx2].src == n
+                        )
+                    ]
+                    if victims:
+                        v = rng.choice(victims)
+                        self._displace(mrrg, dfg, mapping, v)
+                        if not self._greedy_place_overuse(mrrg, dfg, mapping, v, rng):
+                            return None
+        return None
+
+    def _greedy_place_overuse(self, mrrg, dfg, mapping, n, rng) -> bool:
+        cands = self._fu_candidates(dfg, n)
+        rng.shuffle(cands)
+        ready = self._ready_time(dfg, mapping, n, mapping.ii)
+        for fu in cands:
+            for dt in range(mapping.ii):
+                t = ready + dt
+                if mrrg.fu_free(fu, t):
+                    mapping.place[n] = fu
+                    mapping.time[n] = t
+                    mrrg.take_fu(fu, t, n)
+                    self._route_node_edges(mrrg, dfg, mapping, {n}, allow_overuse=True)
+                    return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (Plaid) mapper — Algorithm 2
+# ---------------------------------------------------------------------------
+
+
+def motif_templates(kind: str) -> List[Dict[int, Tuple[int, int]]]:
+    """Flexible schedule templates (§5.2): role -> (alu_slot, cycle_offset).
+
+    Roles follow the Motif.nodes order. All 6 slot permutations are
+    generated with minimal dependency-consistent offsets, plus a one-cycle
+    stagger variant on a dependent node (the paper's explicit fan-out set
+    contains exactly these shapes).
+    """
+    import itertools
+
+    if kind == "fanout":  # n0 -> n1, n0 -> n2
+        deps = {1: [0], 2: [0]}
+    elif kind == "fanin":  # n0 -> n1 <- n2
+        deps = {1: [0, 2]}
+    elif kind == "unicast":  # n0 -> n1 -> n2
+        deps = {1: [0], 2: [1]}
+    else:
+        return [{0: (0, 0)}]
+    out = []
+    seen = set()
+    def depth(role):
+        ds = deps.get(role, [])
+        return 0 if not ds else 1 + max(depth(d) for d in ds)
+
+    role_order = sorted(range(3), key=depth)
+    for perm in itertools.permutations(range(3)):  # role i -> slot perm[i]
+        base = {}
+        for role in role_order:
+            off = 0
+            for d in deps.get(role, []):
+                off = max(off, base[d][1] + 1)
+            base[role] = (perm[role], off)
+        variants = [base]
+        # stagger: push one dependent role a cycle later
+        for role in deps:
+            v = dict(base)
+            slot, off = v[role]
+            v[role] = (slot, off + 1)
+            # re-propagate to roles depending on `role`
+            for r2, ds in deps.items():
+                if role in ds:
+                    s2, o2 = v[r2]
+                    v[r2] = (s2, max(o2, v[role][1] + 1))
+            variants.append(v)
+        for v in variants:
+            key = tuple(sorted(v.items()))
+            if key not in seen:
+                seen.add(key)
+                out.append(v)
+    return out
+
+
+@dataclass
+class Unit:
+    """One schedulable unit of the hierarchical DFG: a motif or a single."""
+    kind: str  # motif kind or 'single'
+    nodes: Tuple[int, ...]
+
+
+class HierarchicalMapper(SAMapper):
+    """Algorithm 2: sort motifs by data dependency; map each motif to the
+    unit with the least routing cost; SA over whole-motif moves with
+    flexible schedule templates; II++ until valid."""
+
+    def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 1500,
+                 motif_seed: int = 0):
+        super().__init__(arch, seed, time_budget)
+        self.motif_seed = motif_seed
+
+    # -- hierarchical DFG ----------------------------------------------------
+    def units_of(self, dfg: DFG) -> List[Unit]:
+        from repro.core.motifs import generate_motifs
+
+        motifs, standalone = generate_motifs(
+            dfg, seed=self.motif_seed, feasibility="strict"
+        )
+        units = [Unit(m.kind, m.nodes) for m in motifs]
+        units += [Unit("single", (n,)) for n in standalone]
+        units += [
+            Unit("single", (n.id,))
+            for n in dfg.nodes.values()
+            if not n.is_compute and n.op not in ("const", "input")
+        ]
+        # consts/inputs are immediate fields in the consumer's instruction
+        # (8-bit constant fields, §4.3) — they occupy no FU and no route
+        # sort by data dependency: topological over the unit graph where
+        # possible (Kahn with min-ASAP tie-break; cycles broken by ASAP)
+        asap = dfg.asap()
+        owner = {n: i for i, u in enumerate(units) for n in u.nodes}
+        deps: Dict[int, Set[int]] = {i: set() for i in range(len(units))}
+        for e in dfg.intra_edges():
+            if e.src not in owner or e.dst not in owner:
+                continue  # const/input edges: immediates, no scheduling dep
+            a, b = owner[e.src], owner[e.dst]
+            if a != b:
+                deps[b].add(a)
+        done: Set[int] = set()
+        order: List[int] = []
+        key = lambda i: (min(asap[n] for n in units[i].nodes), units[i].nodes)
+        while len(order) < len(units):
+            ready = [i for i in range(len(units)) if i not in done and deps[i] <= done]
+            if not ready:  # cycle among units: pick the lowest-ASAP one
+                ready = [min((i for i in range(len(units)) if i not in done), key=key)]
+            ready.sort(key=key)
+            order.append(ready[0])
+            done.add(ready[0])
+        return [units[i] for i in order]
+
+    def pcus(self) -> List[List[int]]:
+        """FU ids per PCU: [alu0, alu1, alu2, alsu]."""
+        tiles: Dict[Tuple[int, int], List[int]] = {}
+        for fu in self.arch.fus:
+            tiles.setdefault(fu.tile, []).append(fu.id)
+        return [sorted(v) for _, v in sorted(tiles.items())]
+
+    def map_at_ii(self, dfg: DFG, ii: int) -> Optional[Mapping]:
+        """Multi-start greedy construction: units in dependency order, each
+        placed on the candidate with the least routing cost among those
+        whose incident edges ALL route (Algorithm 2's 'least routing
+        resource' rule); random restarts perturb order and candidate
+        sampling. A short annealing fix-up runs when greedy gets close."""
+        base_units = self.units_of(dfg)
+        for restart in range(self.restarts):
+            rng = random.Random(self.seed + ii * 9173 + restart * 101)
+            units = list(base_units)
+            if restart:
+                # jitter: swap a few adjacent units (keeps topo-ish order)
+                for _ in range(min(4, len(units) - 1)):
+                    i = rng.randrange(len(units) - 1)
+                    units[i], units[i + 1] = units[i + 1], units[i]
+            mrrg = MRRG(self.arch, ii)
+            mapping = Mapping(self.arch, dfg, ii)
+            failed = None
+            for u in units:
+                if not self._place_unit_feasible(mrrg, dfg, mapping, u, rng):
+                    failed = u
+                    break
+            if failed is None and self._valid(dfg, mapping, mrrg):
+                mapping.validate()
+                return mapping
+        return None
+
+    # -- unit placement ------------------------------------------------------
+    restarts = 10
+
+    def _locality_key(self, dfg, mapping, u, fu_id):
+        """Prefer tiles close to already-placed neighbours of the unit."""
+        members = set(u.nodes)
+        tiles = []
+        for e in dfg.intra_edges():
+            other = None
+            if e.dst in members and e.src not in members:
+                other = e.src
+            elif e.src in members and e.dst not in members:
+                other = e.dst
+            if other is not None and other in mapping.place:
+                tiles.append(self.arch.fus[mapping.place[other]].tile)
+        if not tiles:
+            return 0
+        t = self.arch.fus[fu_id].tile
+        return sum(abs(t[0] - a) + abs(t[1] - b) for a, b in tiles)
+
+    def _place_unit_feasible(self, mrrg, dfg, mapping, u: Unit, rng,
+                             max_feasible: int = 14) -> bool:
+        plcs = self._candidate_placements(dfg, mapping, u, rng)
+        plcs = [p_ for p_ in plcs if self._span_ok(dfg, mapping, p_)]
+        # earliest feasible time first (list-scheduling); then spread load
+        # across tiles (router bandwidth!), then locality
+        def busy(plc):
+            fu = plc[0][1]
+            tile = self.arch.fus[fu].tile
+            on_fu = sum(1 for (f, _c) in mrrg.fu_busy if f == fu)
+            on_tile = sum(
+                1 for (f, _c) in mrrg.fu_busy if self.arch.fus[f].tile == tile
+            )
+            return 2.0 * on_fu + 1.0 * on_tile
+        if not plcs:
+            return False
+        t0 = min(max(t for _, _, t in plc) for plc in plcs)
+        # exploration order: time-bucketed with balance tie-break
+        plcs.sort(key=lambda plc: (
+            max(t for _, _, t in plc),
+            busy(plc) + self._locality_key(dfg, mapping, u, plc[0][1]),
+        ))
+        best, best_s = None, None
+        n_feasible = 0
+        for plc in plcs[:150]:
+            c = self._try_placement_strict(mrrg, dfg, mapping, plc)
+            if c is None:
+                continue
+            n_feasible += 1
+            # combined score: locality dominates (short spans keep the
+            # collective router uncongested), then routing cost, lateness,
+            # and tile pressure
+            score = (
+                0.5 * (max(t for _, _, t in plc) - t0)
+                + 1.0 * busy(plc)
+                + 1.0 * c
+                + 2.0 * self._locality_key(dfg, mapping, u, plc[0][1])
+            )
+            if best_s is None or score < best_s:
+                best, best_s = plc, score
+            self._remove_placement(mrrg, dfg, mapping, plc)
+            if n_feasible >= max_feasible:
+                break
+        if best is None:
+            return False
+        c = self._try_placement_strict(mrrg, dfg, mapping, best)
+        return c is not None
+
+    def _try_placement_strict(self, mrrg, dfg, mapping, plc):
+        """Like _try_placement but rejects unless every incident placed
+        edge routes."""
+        for n, fu, t in plc:
+            if not mrrg.fu_free(fu, t):
+                return None
+        nodes = set()
+        for n, fu, t in plc:
+            mapping.place[n] = fu
+            mapping.time[n] = t
+            mrrg.take_fu(fu, t, n)
+            nodes.add(n)
+        ok, c = self._route_node_edges(mrrg, dfg, mapping, nodes)
+        if not ok:
+            self._remove_placement(mrrg, dfg, mapping, plc)
+            return None
+        return c
+
+    def _unit_ready(self, dfg: DFG, mapping: Mapping, u: Unit) -> int:
+        if not hasattr(self, "_asap_cache") or self._asap_cache[0] is not dfg:
+            self._asap_cache = (dfg, dfg.asap())
+        asap = self._asap_cache[1]
+        members = set(u.nodes)
+        t = min(asap[n] for n in members)
+        for e in dfg.intra_edges():
+            if e.dst in members and e.src not in members and e.src in mapping.time:
+                t = max(t, mapping.time[e.src] + 1)
+        return t
+
+    def _span_ok(self, dfg, mapping, plc) -> bool:
+        times = {n: t for n, _, t in plc}
+        fus = {n: fu for n, fu, _ in plc}
+        for e in dfg.intra_edges():
+            ts = times.get(e.src, mapping.time.get(e.src))
+            td = times.get(e.dst, mapping.time.get(e.dst))
+            if ts is None or td is None:
+                continue
+            if e.src not in times and e.dst not in times:
+                continue
+            if dfg.nodes[e.src].op in ("const", "input"):
+                continue
+            f_s = fus.get(e.src, mapping.place.get(e.src))
+            f_d = fus.get(e.dst, mapping.place.get(e.dst))
+            if td - ts < min_span(self.arch, self.arch.fus[f_s], self.arch.fus[f_d]):
+                return False
+        return True
+
+    def _candidate_placements(self, dfg, mapping, u: Unit, rng, limit=None):
+        """Yield concrete placements: list of (node, fu, t)."""
+        out = []
+        if u.kind == "single":
+            n = u.nodes[0]
+            ready = self._unit_ready(dfg, mapping, u)
+            for fu in self._fu_candidates(dfg, n):
+                # hardwired PCUs refuse standalone nodes on their ALUs (§4.4)
+                pcu_idx = self._pcu_of(fu)
+                if pcu_idx is not None and pcu_idx in self.arch.hardwired \
+                        and self.arch.fus[fu].kind == "alu":
+                    continue
+                for dt in range(mapping.ii + 4):
+                    out.append([(n, fu, ready + dt)])
+        else:
+            ready = self._unit_ready(dfg, mapping, u)
+            tmpls = motif_templates(u.kind)
+            for p_idx, pcu in enumerate(self.pcus()):
+                alus = pcu[:3]
+                hard = self.arch.hardwired.get(p_idx)
+                if hard is not None and hard != u.kind:
+                    continue
+                use = tmpls if hard is None else tmpls[:1]  # fixed wiring
+                for tm in use:
+                    for dt in range(mapping.ii + 4):
+                        base = ready + dt
+                        out.append([
+                            (u.nodes[role], alus[slot], base + off)
+                            for role, (slot, off) in sorted(tm.items())
+                        ])
+        if limit is not None and len(out) > limit:
+            rng.shuffle(out)
+            out = out[:limit]
+        return out
+
+    def _pcu_of(self, fu_id: int) -> Optional[int]:
+        if self.arch.kind != "plaid":
+            return None
+        tile = self.arch.fus[fu_id].tile
+        return tile[0] * self.arch.cols + tile[1]
+
+    def _try_placement(self, mrrg, dfg, mapping, plc) -> Optional[float]:
+        for n, fu, t in plc:
+            if not mrrg.fu_free(fu, t):
+                return None
+        nodes = set()
+        for n, fu, t in plc:
+            mapping.place[n] = fu
+            mapping.time[n] = t
+            mrrg.take_fu(fu, t, n)
+            nodes.add(n)
+        ok, c = self._route_node_edges(mrrg, dfg, mapping, nodes)
+        if not ok:
+            c += 200.0
+        return c
+
+    def _remove_placement(self, mrrg, dfg, mapping, plc):
+        for n, fu, t in plc:
+            if n in mapping.place:
+                self._unroute_node(mrrg, dfg, mapping, n)
+                mrrg.free_fu(mapping.place[n], mapping.time[n])
+                del mapping.place[n]
+                del mapping.time[n]
+
+    def _place_unit_best(self, mrrg, dfg, mapping, u: Unit, rng, limit=64) -> bool:
+        best, best_c = None, None
+        for plc in self._candidate_placements(dfg, mapping, u, rng, limit=limit):
+            c = self._try_placement(mrrg, dfg, mapping, plc)
+            if c is not None:
+                if best_c is None or c < best_c:
+                    best, best_c = plc, c
+                self._remove_placement(mrrg, dfg, mapping, plc)
+                if best_c is not None and best_c < 1.0:
+                    break
+        if best is None:
+            return False
+        self._try_placement(mrrg, dfg, mapping, best)
+        return True
+
+    def _place_unit_random(self, mrrg, dfg, mapping, u: Unit, rng) -> bool:
+        plcs = self._candidate_placements(dfg, mapping, u, rng)
+        rng.shuffle(plcs)
+        # "generate different motif schedules ... select the combination
+        # yielding the highest objective" — evaluate a handful
+        best, best_c = None, None
+        for plc in plcs[:24]:
+            c = self._try_placement(mrrg, dfg, mapping, plc)
+            if c is not None:
+                if best_c is None or c < best_c:
+                    best, best_c = plc, c
+                self._remove_placement(mrrg, dfg, mapping, plc)
+        if best is None:
+            return False
+        self._try_placement(mrrg, dfg, mapping, best)
+        return True
+
+    def _displace_unit(self, mrrg, dfg, mapping, u: Unit):
+        for n in u.nodes:
+            if n in mapping.place:
+                self._unroute_node(mrrg, dfg, mapping, n)
+                mrrg.free_fu(mapping.place[n], mapping.time[n])
+                del mapping.place[n]
+                del mapping.time[n]
+
+    def _snapshot_unit(self, mapping, u: Unit):
+        return [
+            (n, mapping.place.get(n), mapping.time.get(n)) for n in u.nodes
+        ]
+
+    def _restore_unit(self, mrrg, dfg, mapping, u: Unit, snap):
+        plc = [(n, fu, t) for n, fu, t in snap if fu is not None]
+        self._try_placement(mrrg, dfg, mapping, plc)
+
+    def _valid(self, dfg, mapping, mrrg) -> bool:
+        need = sum(
+            1 for n in dfg.nodes.values() if n.op not in ("const", "input")
+        )
+        return (
+            len(mapping.place) == need
+            and not mrrg.overused()
+            and self._all_routed(dfg, mapping)
+        )
+
+    def _offending_units(self, dfg, mapping, units) -> List[Unit]:
+        bad_nodes: Set[int] = set()
+        for idx, e in enumerate(dfg.edges):
+            if dfg.nodes[e.src].op in ("const", "input"):
+                continue
+            if idx not in mapping.routes:
+                bad_nodes.add(e.src)
+                bad_nodes.add(e.dst)
+        for n in dfg.nodes:
+            if n not in mapping.place:
+                bad_nodes.add(n)
+        return [u for u in units if any(n in bad_nodes for n in u.nodes)]
+
+
+# ---------------------------------------------------------------------------
+# Node-level mappers built on the same multi-start greedy construction
+# ---------------------------------------------------------------------------
+
+
+class NodeGreedyMapper(HierarchicalMapper):
+    """Node-level baseline: same stochastic multi-start construction but
+    every unit is a single node (no motif knowledge). This is the
+    'generic mapper' of Fig. 18 — the delta against HierarchicalMapper
+    isolates exactly the motif-scheduling contribution."""
+
+    def units_of(self, dfg: DFG) -> List[Unit]:
+        asap = dfg.asap()
+        units = [
+            Unit("single", (n,)) for n, node in dfg.nodes.items()
+            if node.op not in ("const", "input")
+        ]
+        units.sort(key=lambda u: (asap[u.nodes[0]], u.nodes))
+        return units
+
+
+class PathFinderMapper2(NodeGreedyMapper):
+    """Negotiated-congestion baseline: construct with overuse allowed,
+    then iteratively rip-up & re-route with growing history costs [38]."""
+
+    neg_rounds = 25
+
+    def map_at_ii(self, dfg: DFG, ii: int) -> Optional[Mapping]:
+        for restart in range(4):
+            rng = random.Random(self.seed + ii * 77 + restart * 13)
+            mrrg = MRRG(self.arch, ii)
+            mapping = Mapping(self.arch, dfg, ii)
+            ok = True
+            for u in self.units_of(dfg):
+                if not self._place_unit_overuse(mrrg, dfg, mapping, u, rng):
+                    ok = False
+                    break
+            if not ok:
+                continue
+            for it in range(self.neg_rounds):
+                if not mrrg.overused() and self._all_routed(dfg, mapping):
+                    need = sum(1 for n in dfg.nodes.values()
+                               if n.op not in ("const", "input"))
+                    if len(mapping.place) == need:
+                        try:
+                            mapping.validate()
+                            return mapping
+                        except AssertionError:
+                            break
+                mrrg.bump_history(1.0)
+                for idx in list(mapping.routes):
+                    mrrg.release(dfg.edges[idx].src, mapping.routes.pop(idx))
+                self._route_node_edges(
+                    mrrg, dfg, mapping, set(dfg.nodes), allow_overuse=True
+                )
+        return None
+
+    def _place_unit_overuse(self, mrrg, dfg, mapping, u, rng) -> bool:
+        plcs = self._candidate_placements(dfg, mapping, u, rng)
+        plcs = [p_ for p_ in plcs if self._span_ok(dfg, mapping, p_)]
+        rng.shuffle(plcs)
+        plcs.sort(key=lambda plc: max(t for _, _, t in plc))
+        for plc in plcs[:60]:
+            if any(not mrrg.fu_free(fu, t) for _, fu, t in plc):
+                continue
+            for n, fu, t in plc:
+                mapping.place[n] = fu
+                mapping.time[n] = t
+                mrrg.take_fu(fu, t, n)
+            self._route_node_edges(mrrg, dfg, mapping, set(u.nodes), allow_overuse=True)
+            return True
+        return False

@@ -1,0 +1,105 @@
+"""Causal / sliding-window flash attention as a Pallas TPU kernel.
+
+Online-softmax over KV blocks with the running (m, l, acc) statistics in
+VMEM scratch — the motif-local datapath: the (S, S) score matrix is never
+materialized in HBM. The kv grid dim is minor-most so scratch carries
+across it; fully-masked tiles (beyond the causal band or the sliding
+window) contribute nothing and are skipped via @pl.when — the kernel-level
+version of 'don't provision communication the dataflow doesn't need'.
+
+Grid: (H, S/bq, S/bk).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc, *, bq, bk, n_k, scale, causal, window):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    q0 = qi * bq
+    k0 = ki * bk
+    # visit the tile only if it intersects the causal band / window
+    live = True
+    if causal:
+        live = jnp.asarray(q0 + bq - 1 >= k0)
+    if window:
+        live = jnp.logical_and(live, jnp.asarray(q0 < k0 + bk + window))
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = (q @ k.T) * scale  # (bq, bk)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m_s[...], jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_s[...] - m_new)
+        l_new = alpha * l_s[...] + jnp.sum(p, -1, keepdims=True)
+        acc[...] = acc[...] * alpha + p @ v_ref[0].astype(jnp.float32)
+        m_s[...] = m_new
+        l_s[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0, ...] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q/k/v: (H, S, d) -> (H, S, d)."""
+    H, S, d = q.shape
+    bq, bk = min(block_q, S), min(block_k, S)
+    assert S % bq == 0 and S % bk == 0
+    grid = (H, S // bq, S // bk)
+    scale = 1.0 / math.sqrt(d)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, n_k=grid[2], scale=scale, causal=causal, window=window
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,69 @@
+"""The Plaid PCU itself as a Pallas TPU kernel.
+
+Hardware adaptation (DESIGN.md §2): the paper's PCU executes one 16-bit
+scalar op per ALU per cycle; the TPU-native reading maps CGRA *loop
+iterations* onto the 8×128 vector lanes, so one kernel invocation executes
+the whole motif schedule for a lane-block of iterations *collectively*. The
+value table (what the paper routes through the local router + bypass paths)
+lives entirely in VMEM scratch — inter-step values never touch HBM, which
+is exactly the collective-routing claim.
+
+The schedule (from the Track-A mapper, or hand-written) is static, so the
+kernel body is specialized per motif — the Pallas analogue of the
+domain-hardwired PCU (§4.4).
+
+Grid: (n_iter_blocks,) with inputs (n_inputs, N) striped across lanes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import PCU_OPS, PcuSchedule
+
+
+def _kernel(in_ref, o_ref, table, *, schedule: PcuSchedule, n_inputs: int):
+    for i in range(n_inputs):
+        table[i, ...] = in_ref[i, ...].astype(jnp.float32)
+    for dst, op, a, b in schedule:
+        table[dst, ...] = PCU_OPS[op](table[a, ...], table[b, ...])
+    o_ref[...] = table[...].astype(o_ref.dtype)
+
+
+def motif_pcu(
+    schedule: PcuSchedule,
+    n_inputs: int,
+    inputs: jax.Array,
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """inputs: (n_inputs, N) -> full value table (n_slots, N)."""
+    ni, N = inputs.shape
+    assert ni == n_inputs
+    n_slots = n_inputs + len(schedule)
+    bn = min(block_n, N)
+    assert N % bn == 0, (N, bn)
+    for dst, op, a, b in schedule:
+        assert dst < n_slots and a < dst and b < dst, (dst, a, b)
+        assert op in PCU_OPS, op
+    return pl.pallas_call(
+        functools.partial(_kernel, schedule=tuple(schedule), n_inputs=n_inputs),
+        grid=(N // bn,),
+        in_specs=[pl.BlockSpec((n_inputs, bn), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n_slots, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_slots, N), inputs.dtype),
+        scratch_shapes=[pltpu.VMEM((n_slots, bn), jnp.float32)],
+        interpret=interpret,
+    )(inputs)
+
+
+# canonical three-motif schedules (slots 0..2 = inputs a, b, c)
+FANIN = ((3, "mul", 0, 1), (4, "mul", 1, 2), (5, "add", 3, 4))
+FANOUT = ((3, "add", 0, 1), (4, "mul", 3, 2), (5, "sub", 3, 0))
+UNICAST = ((3, "mul", 0, 1), (4, "add", 3, 2), (5, "max", 4, 0))

@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode; on
+a real TPU backend they lower through Mosaic. ``auto_interpret()`` picks per
+the available backend, so the same call sites work in both worlds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_swiglu as _fs
+from repro.kernels import motif_pcu as _mp
+from repro.kernels import rmsnorm as _rn
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_f", "block_k"))
+def fused_swiglu(x, w1, w3, *, block_m=128, block_f=128, block_k=128):
+    return _fs.fused_swiglu(
+        x, w1, w3, block_m=block_m, block_f=block_f, block_k=block_k,
+        interpret=auto_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_m"))
+def rmsnorm(x, scale, *, eps=1e-6, block_m=256):
+    return _rn.rmsnorm(x, scale, eps=eps, block_m=block_m, interpret=auto_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=auto_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "n_inputs", "block_n"))
+def motif_pcu(inputs, *, schedule, n_inputs, block_n=1024):
+    return _mp.motif_pcu(
+        schedule, n_inputs, inputs, block_n=block_n, interpret=auto_interpret()
+    )

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array) -> jax.Array:
+    """Fan-in motif: silu(x@w1) * (x@w3). x: (M, D); w1/w3: (D, F)."""
+    a = (x.astype(jnp.float32) @ w1.astype(jnp.float32))
+    b = (x.astype(jnp.float32) @ w3.astype(jnp.float32))
+    return (jax.nn.silu(a) * b).astype(x.dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Unicast motif chain: x² -> mean -> rsqrt -> scale. x: (M, D)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window: int = 0
+) -> jax.Array:
+    """q/k/v: (H, S, d). Masked softmax attention, fp32 accumulation."""
+    H, S, d = q.shape
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# --- motif PCU -------------------------------------------------------------
+
+PCU_OPS = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "and": lambda a, b: jnp.bitwise_and(a.astype(jnp.int32), b.astype(jnp.int32)).astype(a.dtype),
+    "or": lambda a, b: jnp.bitwise_or(a.astype(jnp.int32), b.astype(jnp.int32)).astype(a.dtype),
+    "xor": lambda a, b: jnp.bitwise_xor(a.astype(jnp.int32), b.astype(jnp.int32)).astype(a.dtype),
+    "shl": lambda a, b: a * 2.0,
+    "shr": lambda a, b: a / 2.0,
+}
+
+# A PCU schedule: list of steps; each step is (dst_slot, op, src_a, src_b)
+# where slots index a value table whose first n_inputs entries are inputs.
+PcuSchedule = Sequence[Tuple[int, str, int, int]]
+
+
+def motif_pcu(schedule: PcuSchedule, n_inputs: int, inputs: jax.Array) -> jax.Array:
+    """Reference collective execution of a motif schedule.
+
+    inputs: (n_inputs, N) — N loop iterations ride the vector lanes.
+    Returns (n_slots, N) value table after execution.
+    """
+    n_slots = n_inputs + len(schedule)
+    table: List[jax.Array] = [inputs[i] for i in range(n_inputs)]
+    table += [jnp.zeros_like(inputs[0])] * len(schedule)
+    for dst, op, a, b in schedule:
+        table[dst] = PCU_OPS[op](table[a], table[b])
+    return jnp.stack(table)

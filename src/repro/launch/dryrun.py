@@ -1,0 +1,332 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production meshes and record memory/cost/collective
+analysis. This is how the distribution config is proven coherent without
+real hardware (assignment: MULTI-POD DRY-RUN).
+
+Single-cell mode (in-process):
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm_12b \
+        --shape train_4k [--multi-pod] [--json out.json]
+
+Sweep mode (one subprocess per cell so each gets a clean jax runtime):
+    PYTHONPATH=src python -m repro.launch.dryrun --sweep --out experiments/dryrun
+"""
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, RunConfig, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh, validate_mesh
+from repro.models import zoo
+from repro.models.layers import shapes_of
+from repro.parallel import sharding as shard_lib
+from repro.train import optimizer as opt_lib
+from repro.train import steps as steps_lib
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing (collective bytes are NOT in cost_analysis)
+# ---------------------------------------------------------------------------
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_OP_RE = re.compile(
+    r"^\s*(?:%|ROOT\s+%?)?[\w.\-]+\s*=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start|-done)?\("
+)
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: op count and per-device bytes moved.
+
+    Bytes = the op's *output* shape(s) (the data a device materializes from
+    the wire — for all-reduce equal to input). Ops inside a `while` body are
+    counted once, matching cost_analysis semantics; the roofline harness
+    applies the same trip-count extrapolation to both.
+    """
+    out = {k: {"count": 0, "bytes": 0.0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-start(" in line and ("-done" not in line):
+            pass  # async start carries the shapes; -done repeats them — count starts only
+        if "-done(" in line or "-done " in line:
+            continue
+        m = None
+        kind = None
+        for k in COLLECTIVES:
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        lhs = line.split("=", 1)[0] if "=" in line else ""
+        rhs = line.split("=", 1)[1] if "=" in line else line
+        # result type(s) are the first shape literal(s) on the rhs before the op name
+        head = rhs.split(kind)[0]
+        shapes = _TUPLE_RE.findall(head)
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, *, mesh=None, cfg_overrides=None):
+    """Returns (jitted_fn, arg_shapes (ShapeDtypeStructs), donate, meta)."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, None, None, {"skipped": why}
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    run = RunConfig(model=cfg, shape=shape, multi_pod=multi_pod)
+
+    pspec = zoo.param_spec(cfg)
+    p_shapes = shapes_of(pspec)
+    p_shard = shard_lib.shardings_for(pspec, mesh, cfg, multi_pod=multi_pod)
+    in_spec = zoo.input_spec(cfg, shape)
+    b_shapes = shapes_of(in_spec)
+    b_shard = shard_lib.shardings_for(in_spec, mesh, cfg, multi_pod=multi_pod)
+
+    if shape.kind == "train":
+        ocfg = opt_lib.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+        ospec = opt_lib.opt_state_spec(pspec, ocfg)
+        o_shapes = shapes_of(ospec)
+        o_shard = shard_lib.shardings_for(ospec, mesh, cfg, multi_pod=multi_pod)
+        fn = steps_lib.make_train_step(cfg, run)
+        args = (p_shapes, o_shapes, b_shapes)
+        in_sh = (p_shard, o_shard, b_shard)
+        out_struct = jax.eval_shape(fn, *args)
+        rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        out_sh = (
+            p_shard,
+            o_shard,
+            jax.tree.map(lambda _: rep, out_struct[2]),
+        )
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(0, 1))
+    elif shape.kind == "prefill":
+        fn = steps_lib.make_prefill_step(cfg)
+        args = (p_shapes, b_shapes)
+        in_sh = (p_shard, b_shard)
+        cspec = zoo.cache_spec(cfg, shape.global_batch, shape.seq_len)
+        # prefill's cache seq extent can be window-limited for SWA archs
+        out_struct = jax.eval_shape(fn, *args)
+        c_shard = _cache_shardings_from_struct(out_struct[0], cfg, mesh, multi_pod, shape)
+        rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        out_sh = (c_shard, rep)
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    else:  # decode
+        fn = steps_lib.make_serve_step(cfg)
+        cspec = zoo.cache_spec(cfg, shape.global_batch, shape.seq_len)
+        c_shapes = shapes_of(cspec)
+        c_shard = shard_lib.shardings_for(cspec, mesh, cfg, multi_pod=multi_pod)
+        args = (p_shapes, c_shapes, b_shapes["tokens"])
+        tok_sh = shard_lib.shardings_for(
+            {"t": zoo.input_spec(cfg, shape)["tokens"]}, mesh, cfg, multi_pod=multi_pod
+        )["t"]
+        in_sh = (p_shard, c_shard, tok_sh)
+        rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        out_sh = (c_shard, rep, rep)
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(1,))
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "mesh": validate_mesh(mesh),
+        "params": cfg.param_count(),
+        "active_params": cfg.param_count(active_only=True),
+    }
+    return jf, args, mesh, meta
+
+
+def _cache_shardings_from_struct(cache_struct, cfg, mesh, multi_pod, shape):
+    """Build shardings for a prefill-produced cache from its actual shapes."""
+    cspec = zoo.cache_spec(cfg, shape.global_batch, shape.seq_len)
+    # prefill may produce a shorter (window) cache: rebuild specs with actual shapes
+    from repro.models.layers import Spec, spec_map
+
+    def fix(spec, struct):
+        return Spec(tuple(struct.shape), spec.axes, struct.dtype, spec.init)
+
+    fixed = jax.tree.map(
+        fix, cspec, cache_struct, is_leaf=lambda x: isinstance(x, Spec)
+    )
+    return shard_lib.shardings_for(fixed, mesh, cfg, multi_pod=multi_pod)
+
+
+# ---------------------------------------------------------------------------
+# Cell execution
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, cfg_overrides=None) -> Dict:
+    t0 = time.time()
+    jf, args, mesh, meta = build_cell(arch, shape_name, multi_pod, cfg_overrides=cfg_overrides)
+    if jf is None:
+        return meta  # skipped
+    rec = dict(meta)
+    with jax.set_mesh(mesh):
+        t1 = time.time()
+        lowered = jf.lower(*args)
+        rec["lower_s"] = round(time.time() - t1, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    ma = compiled.memory_analysis()
+    print(compiled.memory_analysis())  # proves it fits
+    ca = compiled.cost_analysis()
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    for field in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        rec[field] = int(getattr(ma, field, 0) or 0)
+    rec["flops_per_device"] = float(ca.get("flops", 0.0))
+    rec["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["hlo_lines"] = hlo.count("\n")
+    rec["total_s"] = round(time.time() - t0, 2)
+    rec["status"] = "ok"
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver
+# ---------------------------------------------------------------------------
+
+
+def all_cells():
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            for multi_pod in (False, True):
+                yield arch, shape_name, multi_pod
+
+
+def sweep(out_dir: str, skip_existing: bool = True, only_arch: Optional[str] = None):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch, shape_name, multi_pod in all_cells():
+        if only_arch and arch != only_arch:
+            continue
+        tag = f"{arch}__{shape_name}__{'mp' if multi_pod else 'sp'}"
+        path = os.path.join(out_dir, tag + ".json")
+        if skip_existing and os.path.exists(path):
+            print(f"[skip existing] {tag}")
+            continue
+        cfg = get_config(arch)
+        ok, why = shape_applicable(cfg, SHAPES[shape_name])
+        if not ok:
+            rec = {
+                "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "skipped": why,
+            }
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"[skip rule] {tag}: {why}")
+            continue
+        print(f"[cell] {tag} ...", flush=True)
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape_name, "--json", path,
+        ]
+        if multi_pod:
+            cmd.append("--multi-pod")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+        t0 = time.time()
+        p = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=3600)
+        dt = time.time() - t0
+        if p.returncode != 0:
+            rec = {
+                "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "error", "stderr": p.stderr[-4000:], "wall_s": round(dt, 1),
+            }
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"[FAIL] {tag} ({dt:.0f}s)\n{p.stderr[-1500:]}")
+        else:
+            print(f"[ok] {tag} ({dt:.0f}s)")
+        results.append(tag)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", default=[], help="cfg override k=v")
+    args = ap.parse_args()
+
+    if args.sweep:
+        sweep(args.out, skip_existing=not args.no_skip_existing, only_arch=args.arch)
+        return
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except Exception:
+            pass
+        overrides[k] = v
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, cfg_overrides=overrides or None)
+    except Exception:
+        rec = {
+            "arch": args.arch, "shape": args.shape, "multi_pod": args.multi_pod,
+            "status": "error", "traceback": traceback.format_exc(),
+        }
+        print(rec["traceback"], file=sys.stderr)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rec, f, indent=1)
+        sys.exit(1)
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"}, indent=1))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

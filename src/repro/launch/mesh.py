@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before the first jax initialization.
+
+Mesh layout:
+  single-pod : (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     — 512 chips across DCN
+
+'model' is the innermost axis (ICI-nearest) because TP collectives are the
+most latency-sensitive; 'pod' is outermost (DCN). Scales to 1000+ nodes by
+growing 'pod' (pure DP + gradient sync) without touching in-pod shardings.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(*, model: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def validate_mesh(mesh) -> dict:
+    """Sanity facts recorded in EXPERIMENTS.md §Dry-run."""
+    return {
+        "shape": dict(mesh.shape),
+        "n_devices": mesh.devices.size,
+        "axis_names": list(mesh.axis_names),
+    }

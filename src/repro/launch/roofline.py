@@ -1,0 +1,205 @@
+"""Roofline analysis from the compiled dry-run (assignment §ROOFLINE).
+
+XLA's cost_analysis counts a while-loop (scan) body once, so per-layer
+costs are recovered by compiling small *unrolled* models at 2–3 layer-count
+points and extrapolating linearly (exact for layer-homogeneous stacks):
+
+  dense/moe/ssm/vlm :  total(L) = (2-L)·C(1) + (L-1)·C(2)
+  encdec            :  total(4) = -2·C(1) + 3·C(2)           (enc=dec=L)
+  hybrid (zamba2)   :  total = -36·A + 5·B + 32·C with
+                       A=(k=1,L=1)  B=(k=1,L=2)  C=(k=2,L=2)
+                       (38 mamba blocks + 6 shared-attn applications)
+
+Each point is one subprocess dry-run (512 host devices), cached as JSON.
+Terms (TPU v5e):  compute = FLOPs/dev / 197 TF/s ;  memory = bytes/dev /
+819 GB/s ;  collective = coll-bytes/dev / 50 GB/s.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --sweep [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.roofline --table   # print terms
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+OUT_DIR = "experiments/roofline"
+DRY_DIR = "experiments/dryrun"
+
+
+def points_for(cfg) -> List[Tuple[str, Dict, float]]:
+    """(tag, cfg overrides, combination coefficient) per family."""
+    L = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn = L // cfg.attn_every
+        # solve: A = base+m+a ; B = base+2m+2a ; C = base+2m+a
+        # => m = C-A ; a = B-C ; base = 2A-B
+        # total = base + L·m + n·a = (2-L)·A + (n-1)·B + (L-n)·C
+        return [
+            ("A", {"unroll_layers": True, "n_layers": 1, "attn_every": 1}, 2 - L),
+            ("B", {"unroll_layers": True, "n_layers": 2, "attn_every": 1}, n_attn - 1),
+            ("C", {"unroll_layers": True, "n_layers": 2, "attn_every": 2}, L - n_attn),
+        ]
+    if cfg.family == "encdec":
+        E = cfg.n_enc_layers
+        assert E == L, "extrapolation assumes enc==dec layer count"
+        return [
+            ("A", {"unroll_layers": True, "n_layers": 1, "n_enc_layers": 1}, 2 - L),
+            ("B", {"unroll_layers": True, "n_layers": 2, "n_enc_layers": 2}, L - 1),
+        ]
+    return [
+        ("A", {"unroll_layers": True, "n_layers": 1}, 2 - L),
+        ("B", {"unroll_layers": True, "n_layers": 2}, L - 1),
+    ]
+
+
+def _cell_path(arch, shape, multi_pod, tag, extra=""):
+    mp = "mp" if multi_pod else "sp"
+    suf = f"__{extra}" if extra else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mp}__{tag}{suf}.json")
+
+
+def run_point(arch, shape, multi_pod, tag, overrides, *, extra_overrides=None,
+              extra_tag="", timeout=1800) -> Optional[Dict]:
+    path = _cell_path(arch, shape, multi_pod, tag, extra_tag)
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            return rec
+    os.makedirs(OUT_DIR, exist_ok=True)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", path]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    ov = dict(overrides)
+    if extra_overrides:
+        ov.update(extra_overrides)
+    for k, v in ov.items():
+        cmd += ["--set", f"{k}={json.dumps(v)}"]
+    env = dict(os.environ, PYTHONPATH="src")
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=timeout)
+    if p.returncode != 0:
+        print(f"[roofline FAIL] {arch} {shape} {tag}: {p.stderr[-500:]}")
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def combine(points: List[Tuple[Dict, float]]) -> Dict[str, float]:
+    """Linear combination of per-device costs across extrapolation points."""
+    out = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+    for rec, coef in points:
+        out["flops"] += coef * rec.get("flops_per_device", 0.0)
+        out["bytes"] += coef * rec.get("bytes_per_device", 0.0)
+        coll = rec.get("collectives", {})
+        out["coll_bytes"] += coef * sum(v["bytes"] for v in coll.values())
+    return out
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 extra_overrides=None, extra_tag: str = "") -> Optional[Dict]:
+    from repro.configs import SHAPES, get_config, shape_applicable
+
+    cfg = get_config(arch)
+    if extra_overrides:
+        cfg = cfg.replace(**{k: v for k, v in extra_overrides.items()
+                             if k not in ("n_layers", "n_enc_layers", "attn_every")})
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    pts = []
+    for tag, ov, coef in points_for(get_config(arch)):
+        rec = run_point(arch, shape_name, multi_pod, tag, ov,
+                        extra_overrides=extra_overrides, extra_tag=extra_tag)
+        if rec is None or rec.get("status") != "ok":
+            return None
+        pts.append((rec, coef))
+    tot = combine(pts)
+    n_chips = 512 if multi_pod else 256
+    compute_t = tot["flops"] / PEAK_FLOPS
+    memory_t = tot["bytes"] / HBM_BW
+    coll_t = tot["coll_bytes"] / ICI_BW
+    dominant = max(
+        (("compute", compute_t), ("memory", memory_t), ("collective", coll_t)),
+        key=lambda kv: kv[1],
+    )[0]
+    # MODEL_FLOPS (6ND train / 2ND decode; N_active for MoE)
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        model_flops = 2 * n_active * shape.global_batch
+    hlo_flops_global = tot["flops"] * n_chips
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "extra": extra_tag,
+        "flops_per_device": tot["flops"],
+        "bytes_per_device": tot["bytes"],
+        "coll_bytes_per_device": tot["coll_bytes"],
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": model_flops / hlo_flops_global if hlo_flops_global else None,
+        "roofline_fraction": (
+            (model_flops / n_chips / PEAK_FLOPS)
+            / max(compute_t, memory_t, coll_t)
+            if max(compute_t, memory_t, coll_t) > 0 else None
+        ),
+    }
+
+
+def sweep(multi_pod: bool = False, only: Optional[str] = None):
+    from repro.configs import ARCH_IDS, SHAPES
+
+    out = {}
+    for arch in ARCH_IDS:
+        if only and arch != only:
+            continue
+        for shape in SHAPES:
+            r = analyze_cell(arch, shape, multi_pod)
+            if r is None:
+                print(f"[no data] {arch} {shape}")
+                continue
+            out[f"{arch}__{shape}"] = r
+            if "skipped" not in r:
+                print(f"{arch:22s} {shape:12s} comp={r['compute_s']*1e3:8.2f}ms "
+                      f"mem={r['memory_s']*1e3:8.2f}ms coll={r['collective_s']*1e3:8.2f}ms "
+                      f"dom={r['dominant']:10s} frac={r['roofline_fraction'] and round(r['roofline_fraction'],3)}",
+                      flush=True)
+    path = os.path.join(OUT_DIR, f"summary_{'mp' if multi_pod else 'sp'}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--arch")
+    args = ap.parse_args()
+    if args.sweep:
+        sweep(args.multi_pod, only=args.arch)
+
+
+if __name__ == "__main__":
+    main()

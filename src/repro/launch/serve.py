@@ -1,0 +1,54 @@
+"""Serving launcher (smoke: reduced config on CPU).
+
+PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --smoke --new-tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models import zoo
+from repro.models.layers import init_of
+from repro.serve.loop import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    params = init_of(zoo.param_spec(cfg), jax.random.PRNGKey(0))
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size,
+        dtype=jnp.int32,
+    )
+    extra = None
+    if cfg.family == "encdec":
+        extra = {
+            "audio_embeds": jax.random.normal(
+                jax.random.PRNGKey(2), (args.batch, cfg.enc_seq, cfg.d_model),
+                jnp.bfloat16,
+            )
+        }
+    elif cfg.family == "vlm":
+        B, T = args.batch, args.prompt_len
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        extra = {
+            "embeds": jax.random.normal(jax.random.PRNGKey(2), (B, T, cfg.d_model), jnp.bfloat16),
+            "positions": jnp.stack([pos, pos, pos], axis=1),
+        }
+    tokens, info = generate(cfg, params, prompts, max_new_tokens=args.new_tokens, extra_batch=extra)
+    print("generated:", tokens.tolist())
+    print("info:", info)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts decoder LM (Arctic-style: MoE + dense residual branch).
+
+Dispatch is capacity-based (first-come-first-served token dropping) with a
+scatter into an (E, C, D) buffer so expert matmuls stay dense einsums —
+the buffer's expert dim shards over 'model' (expert parallelism: the
+all-to-all is the pod-scale 'global datapath'), the capacity dim over
+'data'. No sort: position-in-expert comes from a masked cumsum.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import dense as D
+from repro.models import layers as L
+from repro.models.layers import Spec
+from repro.parallel.sharding import constrain
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_param_spec(cfg) -> Dict[str, Spec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": Spec((d, e), ("embed", None), jnp.float32),
+        "w1": Spec((e, d, f), ("expert", "embed", "mlp")),
+        "w3": Spec((e, d, f), ("expert", "embed", "mlp")),
+        "w2": Spec((e, f, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.moe_dense_ff:
+        p["dense"] = L.mlp_param_spec(cfg, cfg.moe_dense_ff)
+    return p
+
+
+def layer_param_spec(cfg) -> Dict[str, Spec]:
+    return {
+        "attn": L.attention_param_spec(cfg),
+        "moe": moe_param_spec(cfg),
+        "ln1": Spec((cfg.d_model,), ("embed",), init="ones"),
+        "ln2": Spec((cfg.d_model,), ("embed",), init="ones"),
+    }
+
+
+def param_spec(cfg) -> Dict[str, Spec]:
+    return {
+        **L.embed_param_spec(cfg),
+        "layers": D._stack(layer_param_spec(cfg), cfg.n_layers),
+        "ln_f": Spec((cfg.d_model,), ("embed",), init="ones"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE block
+# ---------------------------------------------------------------------------
+
+
+def moe_block(cfg, w, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (out, aux_loss)."""
+    B, T, Dm = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    n = B * T
+    C = moe_capacity(cfg, n)
+    xt = x.reshape(n, Dm)
+
+    gates = jax.nn.softmax((xt.astype(jnp.float32) @ w["router"]), axis=-1)  # (n, E)
+    top_w, top_e = lax.top_k(gates, K)  # (n, K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], E), axis=0)
+    prob_mean = jnp.mean(gates, axis=0)
+    aux = E * jnp.sum(density * prob_mean)
+
+    flat_e = top_e.reshape(-1)  # (n*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (n*K, E)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=-1)  # (n*K,)
+    keep = pos < C
+    slot = jnp.where(keep, pos, C)  # overflow -> slot C (sliced off)
+
+    xr = jnp.repeat(xt, K, axis=0)  # (n*K, D) token repeated per route
+    buf = jnp.zeros((E, C + 1, Dm), x.dtype).at[flat_e, slot].add(xr)
+    buf = constrain(buf[:, :C], "model", "data", None)  # (E, C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w["w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, w["w3"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w["w2"])
+    out_buf = constrain(out_buf, "model", "data", None)
+
+    y = out_buf[flat_e, jnp.where(keep, pos, 0)]  # (n*K, D)
+    y = y * (keep * top_w.reshape(-1)).astype(y.dtype)[:, None]
+    y = jnp.sum(y.reshape(n, K, Dm), axis=1)
+
+    if cfg.moe_dense_ff:  # Arctic: dense MLP in parallel ("bypass path")
+        y = y + L.swiglu(w["dense"], xt)
+    return y.reshape(B, T, Dm), aux
+
+
+def _block(cfg, w, x, positions):
+    h, _ = L.attention_layer(
+        cfg, w["attn"], L.rms_norm(x, w["ln1"]), positions, attn_impl=cfg.attn_impl
+    )
+    x = x + h
+    m, aux = moe_block(cfg, w["moe"], L.rms_norm(x, w["ln2"]))
+    return x + m, aux
+
+
+def forward(cfg, params, batch) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed_lookup(params["emb"], batch["tokens"])
+    B, T = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def block(xx, ww):
+        out, aux = _block(cfg, ww, xx, positions)
+        return out, aux
+
+    policy = L.remat_policy(cfg.remat)
+    if policy is not None:
+        block = jax.checkpoint(block, policy=policy)
+    x, auxes = L.scan_layers(cfg, block, x, params["layers"])
+    return L.rms_norm(x, params["ln_f"]), jnp.mean(auxes)
+
+
+def loss_fn(cfg, params, batch):
+    h, aux = forward(cfg, params, batch)
+    nll = L.chunked_xent(h, params["emb"], batch["labels"], cfg.logits_chunk)
+    loss = nll + 0.01 * aux
+    return loss, {"loss": loss, "nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+cache_spec = D.cache_spec
+cache_len = D.cache_len
+
+
+def prefill(cfg, params, batch):
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    S = cache_len(cfg, T)
+    x = L.embed_lookup(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def block(xx, ww):
+        h, (k, v) = L.attention_layer(
+            cfg, ww["attn"], L.rms_norm(xx, ww["ln1"]), positions, attn_impl=cfg.attn_impl
+        )
+        xx = xx + h
+        m, _ = moe_block(cfg, ww["moe"], L.rms_norm(xx, ww["ln2"]))
+        xx = xx + m
+        return xx, (k.reshape(B, T, -1)[:, T - S :], v.reshape(B, T, -1)[:, T - S :])
+
+    policy = L.remat_policy(cfg.remat)
+    if policy is not None:
+        block = jax.checkpoint(block, policy=policy)
+    x, (ks, vs) = L.scan_layers(cfg, block, x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"])
+    logits = (x[:, -1:] @ params["emb"].T).astype(jnp.float32)
+    cache = {
+        "k": ks,
+        "v": vs,
+        "pos": jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S)),
+        "length": jnp.full((B,), T, jnp.int32),
+    }
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, tokens):
+    B = tokens.shape[0]
+    S = cache["k"].shape[2]
+    hd = cfg.resolved_head_dim
+    length = cache["length"]
+    positions = length[:, None].astype(jnp.int32)
+    x = L.embed_lookup(params["emb"], tokens)
+    slot = (length % S).astype(jnp.int32)
+    barange = jnp.arange(B)
+    new_pos = cache["pos"].at[barange, slot].set(length)
+    valid = (new_pos >= 0) & (new_pos <= length[:, None])
+
+    def block(xx, scan_in):
+        ww, kc, vc = scan_in
+        h = L.rms_norm(xx, ww["ln1"])
+        q, k, v = L.attention_qkv(cfg, ww["attn"], h, positions)
+        kc = kc.at[barange, slot].set(k.reshape(B, -1))
+        vc = vc.at[barange, slot].set(v.reshape(B, -1))
+        o = L.decode_attention(
+            q, kc.reshape(B, S, cfg.n_kv_heads, hd), vc.reshape(B, S, cfg.n_kv_heads, hd), valid
+        )
+        xx = xx + o.reshape(B, 1, -1) @ ww["attn"]["wo"]
+        m, _ = moe_block(cfg, ww["moe"], L.rms_norm(xx, ww["ln2"]))
+        xx = xx + m
+        return xx, (kc, vc)
+
+    x, (ks, vs) = L.scan_layers(cfg, block, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["ln_f"])
+    logits = (x @ params["emb"].T).astype(jnp.float32)
+    return {"k": ks, "v": vs, "pos": new_pos, "length": length + 1}, logits

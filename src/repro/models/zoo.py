@@ -1,0 +1,90 @@
+"""Model zoo: one API over all assigned architectures.
+
+Every family module exposes: ``param_spec``, ``loss_fn``, ``forward``,
+``prefill``, ``decode_step``, ``cache_spec``. This module dispatches on
+``cfg.family`` and builds batch input Specs per shape cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import dense, encdec, hybrid, moe, ssm
+from repro.models.layers import Spec
+
+FAMILY_MODULES = {
+    "dense": dense,
+    "vlm": dense,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def get_module(cfg: ModelConfig):
+    return FAMILY_MODULES[cfg.family]
+
+
+def param_spec(cfg: ModelConfig):
+    return get_module(cfg).param_spec(cfg)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return get_module(cfg).loss_fn(cfg, params, batch)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    return get_module(cfg).forward(cfg, params, batch)
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    return get_module(cfg).prefill(cfg, params, batch)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    return get_module(cfg).decode_step(cfg, params, cache, tokens)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    return get_module(cfg).cache_spec(cfg, batch, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Batch input specs per shape cell
+# ---------------------------------------------------------------------------
+
+
+def input_spec(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Spec]:
+    """Spec tree for the *data* inputs of one cell (no allocation)."""
+    B, T = shape.global_batch, shape.seq_len
+    tok = lambda t: Spec((B, t), ("batch", "seq"), jnp.int32)
+    if shape.kind == "train":
+        batch: Dict[str, Spec] = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = Spec((B, T, cfg.d_model), ("batch", "seq", None))
+            batch["positions"] = Spec((B, 3, T), ("batch", None, "seq"), jnp.int32)
+        elif cfg.family == "encdec":
+            batch["audio_embeds"] = Spec((B, cfg.enc_seq, cfg.d_model), ("batch", None, None))
+            batch["tokens"] = tok(T)
+        else:
+            batch["tokens"] = tok(T)
+        batch["labels"] = tok(T)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = Spec((B, T, cfg.d_model), ("batch", "seq", None))
+            batch["positions"] = Spec((B, 3, T), ("batch", None, "seq"), jnp.int32)
+            batch["tokens"] = tok(T)  # for cache bookkeeping
+        elif cfg.family == "encdec":
+            batch["audio_embeds"] = Spec((B, cfg.enc_seq, cfg.d_model), ("batch", None, None))
+            batch["tokens"] = tok(T)
+        else:
+            batch["tokens"] = tok(T)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": Spec((B, 1), ("batch", None), jnp.int32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,51 @@
+"""Gradient compression for the cross-pod (DCN) hop.
+
+int8 per-tensor symmetric quantize→dequantize applied to gradients before
+the optimizer. Under SPMD the gradient all-reduce over the 'pod' axis then
+carries 4× fewer meaningful bits (a real deployment pairs this with a
+custom DCN collective; here the numerics and the test coverage are the
+point — §Perf records the collective-bytes delta). Error feedback keeps a
+residual so quantization error is re-injected next step instead of lost.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> jax.Array:
+    """Quantize-dequantize (simulates the 8-bit wire format)."""
+    if g.dtype == jnp.int32 or g.ndim == 0:
+        return g
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def compress_tree_int8(grads):
+    return jax.tree.map(compress_int8, grads)
+
+
+def compress_with_feedback(grads, residual):
+    """Error-feedback variant: residual carries quantization error."""
+    def one(g, r):
+        if g.ndim == 0:
+            return g, r
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -127, 127)
+        deq = q * scale
+        return deq.astype(g.dtype), (gf - deq)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_r = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_r
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

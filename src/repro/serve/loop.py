@@ -1,0 +1,39 @@
+"""Batched serving driver: prefill once, then decode with greedy sampling.
+
+Small-config CPU-runnable; the same ``prefill_step``/``serve_step`` pair is
+what the dry-run lowers at production shapes (decode_32k / long_500k).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import zoo
+from repro.serve.kvcache import grow_cache
+from repro.train import steps as steps_lib
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompts: jax.Array,  # (B, T) int32
+    max_new_tokens: int = 16,
+    extra_batch: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict]:
+    batch = {"tokens": prompts}
+    if extra_batch:
+        batch.update(extra_batch)
+    prefill = jax.jit(steps_lib.make_prefill_step(cfg))
+    serve = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(1,))
+    cache, logits = prefill(params, batch)
+    cache = grow_cache(cache, max_new_tokens, window=cfg.sliding_window)
+    next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+    out: List[jax.Array] = [next_tok]
+    for _ in range(max_new_tokens - 1):
+        cache, next_tok, _ = serve(params, cache, next_tok)
+        out.append(next_tok)
+    tokens = jnp.concatenate(out, axis=1)
+    return tokens, {"cache_length": int(cache["length"][0])}

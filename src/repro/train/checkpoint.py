@@ -1,0 +1,132 @@
+"""Sharded checkpointing with manifest + elastic re-sharding.
+
+Layout:  <dir>/step_<n>/
+           manifest.json      (step, tree structure, shapes/dtypes, rng)
+           arrays.npz         (flat param + optimizer state leaves)
+
+Arrays are saved from fully-addressable host values (this container is a
+single process; on a real multi-host pod each host would write only its
+addressable shards and the manifest records the global shapes — the load
+path below already re-shards to WHATEVER mesh the restarted job brings up,
+which is the elastic-scaling path: restore on fewer/more devices than the
+writer had).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+try:
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except Exception:  # pragma: no cover
+    _BF16 = None
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, state: Dict[str, Any], keep: int = 3) -> str:
+    """state: {'params': tree, 'opt_state': tree, 'extra': jsonable}."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = {}
+    manifest: Dict[str, Any] = {"step": step, "time": time.time(), "leaves": {}}
+    for group in ("params", "opt_state"):
+        for key, leaf in _flatten(state[group]).items():
+            full = f"{group}/{key}"
+            arr = np.asarray(jax.device_get(leaf))
+            dtype_name = str(arr.dtype)
+            if _BF16 is not None and arr.dtype == _BF16:
+                arr = arr.view(np.uint16)  # npz cannot hold bf16
+                dtype_name = "bfloat16"
+            arrays[full] = arr
+            manifest["leaves"][full] = {
+                "shape": list(arr.shape),
+                "dtype": dtype_name,
+            }
+    manifest["extra"] = state.get("extra", {})
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)  # atomic publish: a crash never leaves a torn ckpt
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: int,
+    like: Dict[str, Any],
+    shardings: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Restore into the structure of ``like`` ({'params':…, 'opt_state':…}).
+
+    ``shardings``: matching tree of NamedSharding — pass the CURRENT mesh's
+    shardings to re-shard elastically (the saved mesh size is irrelevant:
+    arrays are global, device_put re-lays them out).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    out: Dict[str, Any] = {"extra": manifest.get("extra", {})}
+    for group in ("params", "opt_state"):
+        flat_like = _flatten(like[group])
+        flat_sh = _flatten(shardings[group]) if shardings else {}
+        rebuilt = {}
+        for key, leaf in flat_like.items():
+            full = f"{group}/{key}"
+            arr = data[full]
+            if manifest["leaves"][full]["dtype"] == "bfloat16" and _BF16 is not None:
+                arr = arr.view(_BF16)
+            assert list(arr.shape) == list(leaf.shape), (full, arr.shape, leaf.shape)
+            if shardings and key in flat_sh:
+                rebuilt[key] = jax.device_put(arr, flat_sh[key])
+            else:
+                rebuilt[key] = jax.numpy.asarray(arr)
+        out[group] = _unflatten_like(like[group], rebuilt)
+    return out
+
+
+def _unflatten_like(like, flat: Dict[str, Any]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,96 @@
+"""AdamW with configurable state dtype (bf16 states for the 480B-class
+model keep the 256-chip pod within HBM), global-norm clipping, and a
+warmup+cosine schedule. Optimizer state mirrors the param logical axes so
+m/v shard exactly like their parameters (ZeRO-style when fsdp is on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Spec, spec_map
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: str = "float32"
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def opt_state_spec(param_specs, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    mv = spec_map(lambda s: Spec(s.shape, s.axes, dt, init="zeros"), param_specs)
+    return {
+        "m": mv,
+        "v": mv,
+        "step": Spec((), (), jnp.int32, init="zeros"),
+    }
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(z, params),
+        "v": jax.tree.map(z, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def apply_updates(
+    params, grads, opt_state, cfg: AdamWConfig
+) -> Tuple[Any, Dict, Dict[str, jax.Array]]:
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) if cfg.grad_clip else 1.0
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m1 / bc1
+        vh = v1 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m1.astype(sdt), v1.astype(sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,93 @@
+"""jit-able step functions: train_step / prefill_step / serve_step.
+
+These are what the dry-run lowers and what the real launcher runs. Gradient
+sync across pods is implicit in the shardings (batch rides ('pod','data')),
+with optional int8 compression applied to the DCN hop via
+``parallel.compression`` when enabled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import zoo
+from repro.train import optimizer as opt_lib
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig):
+    ocfg = opt_lib.AdamWConfig(
+        learning_rate=run.learning_rate,
+        weight_decay=run.weight_decay,
+        grad_clip=run.grad_clip,
+        warmup_steps=run.warmup_steps,
+        total_steps=run.total_steps,
+        state_dtype=cfg.opt_state_dtype,
+    )
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            loss, metrics = zoo.loss_fn(cfg, p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if run.grad_compression == "int8":
+            from repro.parallel.compression import compress_tree_int8
+
+            grads = compress_tree_int8(grads)
+        params, opt_state, om = opt_lib.apply_updates(params, grads, opt_state, ocfg)
+        metrics = dict(metrics, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_grad_accum_step(cfg: ModelConfig, run: RunConfig):
+    """Micro-batched gradient accumulation (scan over microbatches)."""
+    assert run.grad_accum > 1
+    ocfg = opt_lib.AdamWConfig(
+        learning_rate=run.learning_rate,
+        weight_decay=run.weight_decay,
+        grad_clip=run.grad_clip,
+        warmup_steps=run.warmup_steps,
+        total_steps=run.total_steps,
+        state_dtype=cfg.opt_state_dtype,
+    )
+
+    def step(params, opt_state, batch):
+        # batch leaves: (accum, micro_batch, ...)
+        def micro(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: zoo.loss_fn(cfg, p, mb), has_aux=True
+            )(params)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return acc, loss
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        acc, losses = jax.lax.scan(micro, zero, batch)
+        grads = jax.tree.map(lambda g: g / run.grad_accum, acc)
+        params, opt_state, om = opt_lib.apply_updates(params, grads, opt_state, ocfg)
+        return params, opt_state, dict(loss=jnp.mean(losses), **om)
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        cache, logits = zoo.prefill(cfg, params, batch)
+        return cache, logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens):
+        """One decode step; greedy next-token."""
+        new_cache, logits = zoo.decode_step(cfg, params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return new_cache, next_tok, logits
+
+    return serve_step

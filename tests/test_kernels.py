@@ -1,0 +1,71 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.motif_pcu import FANIN, FANOUT, UNICAST
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype):
+    a = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(a, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-3), jnp.bfloat16: dict(rtol=3e-2, atol=3e-1)}
+
+
+@pytest.mark.parametrize("M,D,F", [(128, 128, 128), (256, 384, 128), (128, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_swiglu(M, D, F, dtype):
+    x, w1, w3 = _arr((M, D), dtype), _arr((D, F), dtype), _arr((D, F), dtype)
+    got = ops.fused_swiglu(x, w1, w3)
+    want = ref.fused_swiglu(x, w1, w3)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("M,D", [(128, 64), (256, 512), (64, 160)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(M, D, dtype):
+    x, s = _arr((M, D), dtype), _arr((D,), dtype)
+    got = ops.rmsnorm(x, s, block_m=64)
+    want = ref.rmsnorm(x, s)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("H,S,d", [(2, 128, 64), (1, 256, 32)])
+@pytest.mark.parametrize("kw", [dict(causal=True), dict(causal=True, window=64),
+                                 dict(causal=False)])
+def test_flash_attention(H, S, d, kw):
+    q, k, v = (_arr((H, S, d), jnp.float32) for _ in range(3))
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64, **kw)
+    want = ref.flash_attention(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("sched", [FANIN, FANOUT, UNICAST], ids=["fanin", "fanout", "unicast"])
+@pytest.mark.parametrize("N", [256, 2048])
+def test_motif_pcu(sched, N):
+    ins = _arr((3, N), jnp.float32)
+    got = ops.motif_pcu(ins, schedule=sched, n_inputs=3, block_n=min(N, 1024))
+    want = ref.motif_pcu(sched, 3, ins)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_motif_pcu_matches_track_a_semantics():
+    """The PCU kernel computes the same function the Track-A DFG interpreter
+    assigns to the corresponding motif (collective-execution equivalence)."""
+    from repro.core.dfg import DFG
+    g = DFG()
+    a = g.add("input"); b = g.add("input"); c = g.add("input")
+    m0 = g.add("mul", inputs=[a, b]); m1 = g.add("mul", inputs=[b, c])
+    s0 = g.add("add", inputs=[m0, m1])
+    hist = g.eval({a: 2.0, b: 3.0, c: 4.0}, iterations=1)
+    ins = jnp.asarray([[2.0], [3.0], [4.0]], jnp.float32)
+    table = ops.motif_pcu(ins, schedule=FANIN, n_inputs=3, block_n=1)
+    assert float(table[5, 0]) == hist[s0][0] == 2.0 * 3.0 + 3.0 * 4.0

@@ -1,0 +1,57 @@
+"""Algorithm 1 unit + property tests (hypothesis over random DAGs)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dfg import DFG, random_dag
+from repro.core.motifs import (
+    Motif, generate_motifs, motif_cover_stats, validate_cover,
+)
+from repro.core.workloads import TABLE2, build_workload
+
+
+def test_base_patterns_found():
+    g = DFG()
+    a = g.add("add"); b = g.add("mul", inputs=[a]); c = g.add("mul", inputs=[b])
+    motifs, standalone = generate_motifs(g, seed=0)
+    assert len(motifs) == 1 and motifs[0].kind == "unicast"
+    assert standalone == []
+
+
+def test_fanout_fanin():
+    g = DFG()
+    a = g.add("add"); b = g.add("mul", inputs=[a]); c = g.add("sub", inputs=[a])
+    motifs, _ = generate_motifs(g, seed=0)
+    assert motifs and motifs[0].kind == "fanout"
+    g2 = DFG()
+    x = g2.add("add"); y = g2.add("mul"); z = g2.add("add", inputs=[x, y])
+    motifs2, _ = generate_motifs(g2, seed=0)
+    assert motifs2 and motifs2[0].kind == "fanin"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(6, 40))
+def test_random_dag_cover_valid(seed, n):
+    g = random_dag(n, seed=seed)
+    motifs, standalone = generate_motifs(g, seed=seed)
+    validate_cover(g, motifs, standalone)  # disjoint, edges exist, complete
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_strict_cover_also_valid(seed):
+    g = random_dag(30, seed=seed)
+    motifs, standalone = generate_motifs(g, seed=seed, feasibility="strict")
+    validate_cover(g, motifs, standalone)
+
+
+def test_table2_counts_exact_and_coverage_close():
+    tot_ours = tot_paper = 0
+    for w in TABLE2:
+        g = build_workload(w)
+        assert g.n_nodes == w.total
+        assert len(g.compute_nodes) == w.compute
+        motifs, standalone = generate_motifs(g, seed=1)
+        validate_cover(g, motifs, standalone)
+        tot_ours += motif_cover_stats(g, motifs)["covered"]
+        tot_paper += w.covered_paper
+    assert tot_ours >= 0.8 * tot_paper, (tot_ours, tot_paper)

@@ -1,0 +1,30 @@
+"""Calibration anchors + derived headline ratios vs published values."""
+from repro.core.power_area import (
+    fabric_area_um2, fabric_power_uw, headline_ratios,
+)
+
+
+def test_st_power_split_matches_fig2a():
+    p = fabric_power_uw("st4x4")
+    t = p["total"]
+    assert abs(p["cfg_comm"] / t - 0.29) < 0.02
+    assert abs(p["cfg_comp"] / t - 0.19) < 0.02
+    assert abs(p["router"] / t - 0.15) < 0.02
+
+
+def test_plaid_area_anchor():
+    r = headline_ratios()
+    assert abs(r["plaid_fabric_area_um2"] - 33_366) / 33_366 < 0.01
+
+
+def test_derived_headlines_near_paper():
+    r = headline_ratios()
+    assert abs(r["power_plaid_over_st"] - 0.57) < 0.05      # -43% power
+    assert abs(r["area_plaid_over_st"] - 0.54) < 0.03       # -46% area
+    assert abs(r["power_plaid_over_spatial"] - 1.0) < 0.08  # iso-power
+    assert abs(r["area_plaid_over_spatial"] - 0.52) < 0.05  # -48% area
+
+
+def test_specialized_variants_cheaper():
+    assert fabric_power_uw("plaid_ml")["total"] < fabric_power_uw("plaid2x2")["total"]
+    assert fabric_area_um2("st4x4_ml")["total"] < fabric_area_um2("st4x4")["total"]

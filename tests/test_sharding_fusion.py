@@ -1,0 +1,56 @@
+"""Sharding rules + jaxpr motif-fusion pass."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core.fusion import analyze_fn, jaxpr_to_dfg
+from repro.models import zoo
+from repro.models.layers import Spec
+from repro.parallel.sharding import _pspec_for, logical_rules, pspecs_for
+
+SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_pspec_divisibility_fallback():
+    rules = logical_rules(get_config("whisper_tiny"))
+    # whisper vocab 51865 is not divisible by 16 -> replicated
+    ps = _pspec_for(("vocab", "embed"), rules, (51865, 384), SIZES)
+    assert ps[0] is None
+    ps2 = _pspec_for(("vocab", "embed"), rules, (51872, 384), SIZES)
+    assert ps2[0] == "model"
+
+
+def test_pspec_dedup_mesh_axis():
+    rules = logical_rules(get_config("arctic_480b"))
+    ps = _pspec_for(("expert", "embed", "mlp"), rules, (128, 7168, 4864), SIZES)
+    # expert wins 'model'; mlp must NOT also map to it
+    assert ps[0] == "model" and ps[2] is None
+
+
+@pytest.mark.parametrize("arch", ["arctic_480b", "qwen3_14b", "falcon_mamba_7b"])
+def test_param_pspecs_build(arch):
+    cfg = get_config(arch)
+    specs = zoo.param_spec(cfg)
+    pspecs = pspecs_for(specs, cfg, multi_pod=True, axis_sizes=SIZES)
+    assert jax.tree.leaves(pspecs, is_leaf=lambda x: hasattr(x, "_normalized_spec") or True)
+
+
+def test_fusion_finds_fanin_in_swiglu():
+    def swiglu(x, w1, w3):
+        return jax.nn.silu(x @ w1) * (x @ w3)
+    res = analyze_fn(swiglu, jnp.ones((4, 8)), jnp.ones((8, 16)), jnp.ones((8, 16)))
+    kinds = {m.kind for m in res["motifs"]}
+    assert res["stats"]["n_motifs"] >= 1
+    assert "fanin" in kinds or "unicast" in kinds
+
+
+def test_fusion_transformer_block_coverage():
+    def block(x, w1, w3, w2, scale):
+        h = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * scale
+        y = jax.nn.silu(h @ w1) * (h @ w3)
+        return x + y @ w2
+    res = analyze_fn(block, jnp.ones((4, 16)), jnp.ones((16, 32)),
+                     jnp.ones((16, 32)), jnp.ones((32, 16)), jnp.ones(16))
+    s = res["stats"]
+    assert s["covered"] >= 0.5 * s["n_compute"]
