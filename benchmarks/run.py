@@ -23,6 +23,7 @@ import numpy as np
 CGRA_RESULTS = "experiments/cgra/results.json"
 ROOFLINE_SP = "experiments/roofline/summary_sp.json"
 DRYRUN_DIR = "experiments/dryrun"
+BENCH_MAPPER = "BENCH_mapper.json"
 
 ROWS = []
 
@@ -216,6 +217,31 @@ def bench_mappers():
 
 
 # ---------------------------------------------------------------------------
+# Mapper speed — routing-engine trajectory (BENCH_mapper.json)
+# ---------------------------------------------------------------------------
+
+
+def bench_mapper_speed():
+    if not os.path.exists(BENCH_MAPPER):
+        emit("bench_mapper_speed", 0, "SKIP(run python -m repro.core.collect --quick)")
+        return
+    with open(BENCH_MAPPER) as f:
+        data = json.load(f)
+    quick_runs = [r for r in data.get("runs", []) if r.get("quick")]
+    if not quick_runs:
+        emit("bench_mapper_speed", 0, "SKIP(no quick runs recorded)")
+        return
+    latest = quick_runs[-1]
+    ref = data.get("reference", {}).get("seed_quick_wall_s")
+    speedup = f" {ref / latest['wall_s']:.1f}x vs seed {ref}s" if ref else ""
+    emit(
+        "bench_mapper_speed", latest["wall_s"] * 1e6,
+        f"collect --quick wall={latest['wall_s']}s jobs={latest['jobs']}"
+        f"{speedup} (target >=5x)",
+    )
+
+
+# ---------------------------------------------------------------------------
 # Fig. 19 — domain specialization
 # ---------------------------------------------------------------------------
 
@@ -349,6 +375,7 @@ def main() -> None:
     bench_apps()
     bench_scalability()
     bench_mappers()
+    bench_mapper_speed()
     bench_domain()
     bench_kernels()
     bench_roofline()

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 CI: test suite + quick Track-A collection + mapping-quality diff,
+# all under a wall-clock budget.
+#
+#   CI_BUDGET_S   per-phase timeout in seconds (default 900)
+#   CI_FULL_TESTS set to 1 to run the suite at full SA budgets (no --quick)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+BUDGET="${CI_BUDGET_S:-900}"
+
+echo "== tier-1 tests (budget ${BUDGET}s) =="
+if [ "${CI_FULL_TESTS:-0}" = "1" ]; then
+    timeout "$BUDGET" python -m pytest -x -q
+else
+    timeout "$BUDGET" python -m pytest -x -q --quick
+fi
+
+echo "== collect --quick (budget ${BUDGET}s) =="
+OUT=$(mktemp /tmp/ci_results.XXXXXX.json)
+rm -f "$OUT"   # collect resumes from existing files; start fresh
+timeout "$BUDGET" python -m repro.core.collect --quick --out "$OUT" \
+    --bench-out /tmp/ci_bench_mapper.json
+
+echo "== II diff vs golden =="
+python scripts/diff_ii.py "$OUT" tests/golden_ii_quick.json
+
+echo "CI OK"

@@ -65,6 +65,14 @@ class Arch:
     def n_fus(self) -> int:
         return len(self.fus)
 
+    def routing_engine(self):
+        """The (lazily built, cached) shared routing engine for this fabric:
+        all-pairs hop-distance tables + per-FU start/heuristic caches used by
+        every mapper's A* router.  See :mod:`repro.core.routing`."""
+        from repro.core.routing import engine_for
+
+        return engine_for(self)
+
     def mem_fus(self) -> List[FU]:
         return [f for f in self.fus if "load" in f.ops]
 
@@ -254,7 +262,23 @@ def build_plaid(rows: int = 2, cols: int = 2, name: str = "plaid2x2",
     return a
 
 
+_ARCH_CACHE: Dict[str, Arch] = {}
+
+
 def make_arch(name: str) -> Arch:
+    """Build (or return the cached) architecture for ``name``.
+
+    Arch objects are immutable after construction, and the routing engine's
+    distance tables hang off the instance — caching means every mapper and
+    test in a process shares one fabric and one set of tables per name.
+    """
+    a = _ARCH_CACHE.get(name)
+    if a is None:
+        a = _ARCH_CACHE[name] = _build_arch(name)
+    return a
+
+
+def _build_arch(name: str) -> Arch:
     if name in ("st", "st4x4", "spatio_temporal"):
         return build_spatio_temporal(4, 4, "st4x4")
     if name in ("st6x6",):

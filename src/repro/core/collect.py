@@ -6,6 +6,15 @@ Per workload: II + cycles on Plaid 2×2 / ST 4×4 / spatial 4×4 (Figs. 12,
 14, 15), Plaid 3×3 (Fig. 17), mapper comparison on Plaid (Fig. 18:
 PathFinder / node-level / hierarchical), ML-specialized variants (Fig. 19),
 motif coverage (Table 2), and the per-mapping simulator verification.
+
+The (workload × mapper/arch) grid is embarrassingly parallel: each cell is
+dispatched to a ``multiprocessing`` pool (``--jobs``, default = CPU count)
+and results are merged as they land.  Every mapper runs at a fixed seed, so
+the parallel run is bit-identical to the serial one.  Resume-from-JSON is
+preserved: workloads already present in ``--out`` are skipped, and the cache
+is rewritten after each workload completes.  Wall-clock per run is appended
+to ``BENCH_mapper.json`` (the mapper-speed trajectory surfaced by
+``benchmarks/run.py``'s ``bench_mapper_speed`` row).
 """
 from __future__ import annotations
 
@@ -13,6 +22,8 @@ import argparse
 import json
 import os
 import time
+from multiprocessing import Pool
+from typing import Dict, Tuple
 
 from repro.core.arch import make_arch
 from repro.core.mapper import (
@@ -23,98 +34,141 @@ from repro.core.mapper import (
 from repro.core.motifs import generate_motifs, motif_cover_stats, validate_cover
 from repro.core.simulate import simulate
 from repro.core.spatial import map_spatial
-from repro.core.workloads import TABLE2, build_workload
+from repro.core.workloads import TABLE2, build_workload, workload_by_name
+
+BENCH_PATH = "BENCH_mapper.json"
+
+# job name -> (arch name, mapper class); "motifs" and "spatial" are special
+MAPPER_JOBS = {
+    "plaid": ("plaid2x2", HierarchicalMapper),
+    "plaid3x3": ("plaid3x3", HierarchicalMapper),
+    "st": ("st4x4", NodeGreedyMapper),
+    "pf_on_plaid": ("plaid2x2", PathFinderMapper2),
+    "node_on_plaid": ("plaid2x2", NodeGreedyMapper),
+    "plaid_ml": ("plaid_ml", HierarchicalMapper),
+}
+JOB_NAMES = ["motifs", "spatial"] + list(MAPPER_JOBS)
 
 
-def collect(out_path: str, quick: bool = False):
-    archs = {
-        "plaid": make_arch("plaid2x2"),
-        "plaid3x3": make_arch("plaid3x3"),
-        "st": make_arch("st4x4"),
-        "spatial": make_arch("spatial4x4"),
-        "st_ml": make_arch("st4x4"),  # same fabric; power model differs
-        "plaid_ml": make_arch("plaid_ml"),
+def run_job(task: Tuple[str, int, str]):
+    """One grid cell: map one workload with one mapper/arch (or run the
+    motif / spatial analyses).  Returns a small picklable payload."""
+    wname, unroll, job = task
+    w = workload_by_name(wname, unroll)
+    g = build_workload(w)
+    t0 = time.time()
+    out: Dict[str, object] = {}
+    if job == "motifs":
+        motifs, standalone = generate_motifs(g, seed=1)
+        validate_cover(g, motifs, standalone)
+        out["motifs"] = motif_cover_stats(g, motifs)
+        strict, _ = generate_motifs(g, seed=1, feasibility="strict")
+        out["motifs_strict_covered"] = motif_cover_stats(g, strict)["covered"]
+    elif job == "spatial":
+        sp = map_spatial(g, make_arch("spatial4x4"))
+        out["spatial"] = {
+            "segments": sp.n_segments,
+            "extra_mem_ops": sp.extra_mem_ops,
+            "analytic": bool(sp.analytic_segments),
+        }
+        out["cycles"] = sp.cycles(w.iterations)
+    else:
+        arch_name, cls = MAPPER_JOBS[job]
+        m = cls(make_arch(arch_name), seed=0).map(g)
+        out["ii"] = m.ii if m else None
+        out["cycles"] = m.cycles(w.iterations) if m else None
+        if job in ("plaid", "st"):
+            # functional verification of the two headline mappings
+            verified = False
+            if m is not None:
+                try:
+                    simulate(m, iterations=3)
+                    verified = True
+                except AssertionError:
+                    verified = False
+            out["verified"] = verified
+    out["wall_s"] = time.time() - t0
+    return f"{w.name}_u{w.unroll}", job, out
+
+
+def _finalize(w, parts: Dict[str, Dict]) -> Dict:
+    rec = {
+        "domain": w.domain,
+        "iterations": w.iterations,
+        "total": w.total,
+        "compute": w.compute,
+        "covered_paper": w.covered_paper,
+        "motifs": parts["motifs"]["motifs"],
+        "motifs_strict_covered": parts["motifs"]["motifs_strict_covered"],
+        "ii": {j: parts[j]["ii"] for j in MAPPER_JOBS},
+        "cycles": {j: parts[j]["cycles"] for j in MAPPER_JOBS},
+        "spatial": parts["spatial"]["spatial"],
+        "verified": {j: parts[j]["verified"] for j in ("plaid", "st")},
+        "wall_s": round(sum(p["wall_s"] for p in parts.values()), 1),
     }
+    rec["cycles"]["spatial"] = parts["spatial"]["cycles"]
+    return rec
+
+
+def _append_bench(bench_path: str, entry: Dict):
+    data = {"runs": []}
+    if os.path.exists(bench_path):
+        with open(bench_path) as f:
+            data = json.load(f)
+    data.setdefault("runs", []).append(entry)
+    with open(bench_path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def collect(out_path: str, quick: bool = False, jobs: int = 0,
+            bench_path: str = BENCH_PATH):
     results = {}
     if os.path.exists(out_path):  # resume
         with open(out_path) as f:
             results = json.load(f)
     table = TABLE2[:6] if quick else TABLE2
-    for w in table:
-        g = build_workload(w)
-        key = f"{w.name}_u{w.unroll}"
-        if key in results:
-            continue
-        t0 = time.time()
-        rec = {
-            "domain": w.domain,
-            "iterations": w.iterations,
-            "total": w.total,
-            "compute": w.compute,
-            "covered_paper": w.covered_paper,
-        }
-        motifs, standalone = generate_motifs(g, seed=1)
-        validate_cover(g, motifs, standalone)
-        rec["motifs"] = motif_cover_stats(g, motifs)
-        strict, _ = generate_motifs(g, seed=1, feasibility="strict")
-        rec["motifs_strict_covered"] = motif_cover_stats(g, strict)["covered"]
+    pending = [w for w in table if f"{w.name}_u{w.unroll}" not in results]
+    tasks = [(w.name, w.unroll, j) for w in pending for j in JOB_NAMES]
+    by_key = {f"{w.name}_u{w.unroll}": w for w in pending}
+    n_jobs = max(1, jobs or os.cpu_count() or 1)
+    t_start = time.time()
 
-        m_plaid = HierarchicalMapper(archs["plaid"], seed=0).map(g)
-        m_plaid3 = HierarchicalMapper(archs["plaid3x3"], seed=0).map(g)
-        m_st = NodeGreedyMapper(archs["st"], seed=0).map(g)
-        m_pf_plaid = PathFinderMapper2(archs["plaid"], seed=0).map(g)
-        m_node_plaid = NodeGreedyMapper(archs["plaid"], seed=0).map(g)
-        m_plaid_ml = HierarchicalMapper(archs["plaid_ml"], seed=0).map(g)
-        sp = map_spatial(g, archs["spatial"])
-
-        def cyc(m):
-            return m.cycles(w.iterations) if m else None
-
-        rec["ii"] = {
-            "plaid": m_plaid.ii if m_plaid else None,
-            "plaid3x3": m_plaid3.ii if m_plaid3 else None,
-            "st": m_st.ii if m_st else None,
-            "pf_on_plaid": m_pf_plaid.ii if m_pf_plaid else None,
-            "node_on_plaid": m_node_plaid.ii if m_node_plaid else None,
-            "plaid_ml": m_plaid_ml.ii if m_plaid_ml else None,
-        }
-        rec["cycles"] = {
-            "plaid": cyc(m_plaid),
-            "plaid3x3": cyc(m_plaid3),
-            "st": cyc(m_st),
-            "pf_on_plaid": cyc(m_pf_plaid),
-            "node_on_plaid": cyc(m_node_plaid),
-            "plaid_ml": cyc(m_plaid_ml),
-            "spatial": sp.cycles(w.iterations),
-        }
-        rec["spatial"] = {
-            "segments": sp.n_segments,
-            "extra_mem_ops": sp.extra_mem_ops,
-            "analytic": bool(sp.analytic_segments),
-        }
-        # functional verification of the two headline mappings
-        verified = {}
-        for nm, m in (("plaid", m_plaid), ("st", m_st)):
-            if m is None:
-                verified[nm] = False
+    def consume(stream):
+        partial: Dict[str, Dict[str, Dict]] = {}
+        for key, job, out in stream:
+            parts = partial.setdefault(key, {})
+            parts[job] = out
+            if len(parts) < len(JOB_NAMES):
                 continue
-            try:
-                simulate(m, iterations=3)
-                verified[nm] = True
-            except AssertionError:
-                verified[nm] = False
-        rec["verified"] = verified
-        rec["wall_s"] = round(time.time() - t0, 1)
-        results[key] = rec
-        print(
-            f"{key:14s} plaid={rec['ii']['plaid']} st={rec['ii']['st']} "
-            f"spatial_segs={rec['spatial']['segments']} "
-            f"verified={verified} ({rec['wall_s']}s)",
-            flush=True,
-        )
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-        with open(out_path, "w") as f:
-            json.dump(results, f, indent=1)
+            rec = _finalize(by_key[key], partial.pop(key))
+            results[key] = rec
+            print(
+                f"{key:14s} plaid={rec['ii']['plaid']} st={rec['ii']['st']} "
+                f"spatial_segs={rec['spatial']['segments']} "
+                f"verified={rec['verified']} ({rec['wall_s']}s cpu)",
+                flush=True,
+            )
+            if os.path.dirname(out_path):
+                os.makedirs(os.path.dirname(out_path), exist_ok=True)
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1)
+
+    if tasks:
+        if n_jobs > 1:
+            with Pool(min(n_jobs, len(tasks))) as pool:
+                consume(pool.imap_unordered(run_job, tasks))
+        else:
+            consume(map(run_job, tasks))
+        _append_bench(bench_path, {
+            "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "quick": quick,
+            "jobs": n_jobs,
+            "workloads_run": len(pending),
+            "wall_s": round(time.time() - t_start, 1),
+            "cpu_s": round(
+                sum(results[k]["wall_s"] for k in by_key if k in results), 1
+            ),
+        })
     return results
 
 
@@ -122,5 +176,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/cgra/results.json")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="worker processes (default: CPU count; 1 = serial)")
+    ap.add_argument("--bench-out", default=BENCH_PATH,
+                    help="mapper-speed trajectory JSON")
     args = ap.parse_args()
-    collect(args.out, args.quick)
+    collect(args.out, args.quick, jobs=args.jobs, bench_path=args.bench_out)

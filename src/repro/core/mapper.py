@@ -3,10 +3,16 @@
 Implements the paper's compiler stack:
 
 * :class:`MRRG` — time-extended modulo routing resource graph with net-aware
-  capacity bookkeeping (same-net reuse is free, as in PathFinder).
+  capacity bookkeeping (same-net reuse is free, as in PathFinder), backed by
+  flat per-slot arrays (``rid * ii + cyc``) with incrementally-maintained
+  overuse counters so SA moves are evaluated by delta cost.
 * :func:`route_edge` — elapsed-time Dijkstra/DP from a producer's output
   resources to a resource the consumer's operand mux can read, arriving at
-  exactly the consumer's issue cycle (holdable resources may buffer).
+  exactly the consumer's issue cycle (holdable resources may buffer).  The
+  search uses the per-:class:`~repro.core.routing.RoutingEngine` all-pairs
+  hop-distance table as an admissible A* heuristic: states that cannot reach
+  the destination in the cycles remaining are pruned without changing the
+  optimum (results are bit-identical to the original blind search).
 * :class:`HierarchicalMapper` — **Algorithm 2**: motifs sorted by dependency,
   placed whole onto PCUs with the paper's flexible schedule templates
   (§5.2, Fig. 11), simulated-annealing moves over whole motifs, Dijkstra
@@ -22,95 +28,146 @@ port registers) — see ``start_resources``.
 from __future__ import annotations
 
 import math
+import os
 import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
 from repro.core.arch import Arch, FU
 from repro.core.dfg import DFG, Edge
 from repro.core.motifs import Motif
+from repro.core.routing import UNREACH, engine_for
 
 BIG = 1e9
 
 
 # ---------------------------------------------------------------------------
-# MRRG with net-aware reservations
+# MRRG with net-aware reservations (flat array-backed)
 # ---------------------------------------------------------------------------
 
 
 class MRRG:
+    """Time-extended modulo routing resource graph.
+
+    Occupancy and PathFinder history are flat arrays indexed
+    ``rid * ii + (t % ii)``; the net-aware sharing semantics are unchanged:
+    a modulo slot may be shared only by the SAME VALUE — the same net at the
+    same absolute cycle.  The same net at a different absolute cycle on the
+    same modulo slot is a different iteration's value: a collision, not a
+    share.  Overuse is tracked incrementally (``_n_over``) so mappers can
+    evaluate move acceptance via delta cost instead of re-scanning.
+    """
+
     def __init__(self, arch: Arch, ii: int):
         self.arch = arch
         self.ii = ii
-        # (rid, cyc) -> {(net, abs_t): refcount}. Sharing is legal only for
-        # the SAME VALUE: same net at the same absolute cycle. The same net
-        # at a different absolute cycle on the same modulo slot is a
-        # different iteration's value — a collision, not a share.
-        self.res: Dict[Tuple[int, int], Dict[Tuple[int, int], int]] = {}
+        self.engine = engine_for(arch)
+        n = len(arch.rnodes)
+        self.nslots = n * ii
+        # per-slot distinct-value table {(net, abs_t): refcount}; None = free
+        self.slot_vals: List[Optional[Dict[Tuple[int, int], int]]] = (
+            [None] * self.nslots
+        )
+        self.occ_arr = np.zeros(self.nslots, dtype=np.int32)
+        self.hist_arr = np.zeros(self.nslots, dtype=np.float64)
+        self.cap_arr = np.repeat(
+            np.asarray(self.engine.cap, dtype=np.int32), ii
+        )
+        # base routing cost per slot (1 + history), as a plain list for fast
+        # scalar access in the router's inner loop
+        self._base: List[float] = [1.0] * self.nslots
+        self._n_over = 0  # slots currently over capacity
         self.fu_busy: Dict[Tuple[int, int], int] = {}  # (fu, cyc) -> node
-        self.history: Dict[Tuple[int, int], float] = {}  # PathFinder history cost
+        self.fu_load: Dict[int, int] = {}  # fu id -> scheduled ops
+        self.tile_load: Dict[Tuple[int, int], int] = {}  # tile -> scheduled ops
 
     def cyc(self, t: int) -> int:
         return t % self.ii
 
     # -- FU slots ----------------------------------------------------------
     def fu_free(self, fu: int, t: int) -> bool:
-        return (fu, self.cyc(t)) not in self.fu_busy
+        return (fu, t % self.ii) not in self.fu_busy
 
     def take_fu(self, fu: int, t: int, node: int):
-        key = (fu, self.cyc(t))
+        key = (fu, t % self.ii)
         assert key not in self.fu_busy, (key, node)
         self.fu_busy[key] = node
+        self.fu_load[fu] = self.fu_load.get(fu, 0) + 1
+        tile = self.arch.fus[fu].tile
+        self.tile_load[tile] = self.tile_load.get(tile, 0) + 1
 
     def free_fu(self, fu: int, t: int):
-        self.fu_busy.pop((fu, self.cyc(t)), None)
+        if self.fu_busy.pop((fu, t % self.ii), None) is not None:
+            self.fu_load[fu] -= 1
+            self.tile_load[self.arch.fus[fu].tile] -= 1
 
     # -- routing resources ---------------------------------------------------
-    def occ(self, rid: int, t: int) -> int:
-        return len(self.res.get((rid, self.cyc(t)), ()))
-
-    def rcost(self, rid: int, t: int, net: int, allow_overuse: bool) -> float:
-        node = self.arch.rnodes[rid]
-        key = (rid, self.cyc(t))
-        vals = self.res.get(key, {})
-        if (net, t) in vals:
-            return 0.05  # same value reuse (fan-out) is nearly free
-        over = len(vals) + 1 - node.cap
-        base = 1.0 + self.history.get(key, 0.0)
-        if over > 0:
-            if not allow_overuse:
-                return BIG
-            base += 8.0 * over
-        return base
+    # The per-(slot, net) congestion cost — 0.05 for same-value reuse,
+    # 1 + history, +8.0 per unit of overuse when allowed — lives inlined in
+    # _route_edge_once (start layer and relaxation layer); keep both copies
+    # in sync when changing the formula.
 
     def reserve(self, net: int, path: Sequence[Tuple[int, int]]):
+        ii = self.ii
+        sv = self.slot_vals
+        cap = self.engine.cap
         for rid, t in path:
-            d = self.res.setdefault((rid, self.cyc(t)), {})
-            d[(net, t)] = d.get((net, t), 0) + 1
+            k = rid * ii + t % ii
+            d = sv[k]
+            if d is None:
+                d = sv[k] = {}
+            key = (net, t)
+            if key in d:
+                d[key] += 1
+            else:
+                d[key] = 1
+                l = len(d)
+                self.occ_arr[k] = l
+                if l == cap[rid] + 1:
+                    self._n_over += 1
 
     def release(self, net: int, path: Sequence[Tuple[int, int]]):
+        ii = self.ii
+        sv = self.slot_vals
+        cap = self.engine.cap
         for rid, t in path:
-            key = (rid, self.cyc(t))
-            d = self.res.get(key)
-            if d is not None and (net, t) in d:
-                d[(net, t)] -= 1
-                if d[(net, t)] <= 0:
-                    del d[(net, t)]
-                if not d:
-                    del self.res[key]
+            k = rid * ii + t % ii
+            d = sv[k]
+            key = (net, t)
+            if d is not None and key in d:
+                d[key] -= 1
+                if d[key] <= 0:
+                    del d[key]
+                    l = len(d)
+                    self.occ_arr[k] = l
+                    if l == cap[rid]:
+                        self._n_over -= 1
+                    if not d:
+                        sv[k] = None
+
+    def has_overuse(self) -> bool:
+        return self._n_over > 0
+
+    def overuse_count(self) -> int:
+        return self._n_over
 
     def overused(self) -> List[Tuple[int, int]]:
-        out = []
-        for (rid, c), nets in self.res.items():
-            if len(nets) > self.arch.rnodes[rid].cap:
-                out.append((rid, c))
-        return out
+        if not self._n_over:
+            return []
+        ii = self.ii
+        ks = np.flatnonzero(self.occ_arr > self.cap_arr)
+        return [(int(k) // ii, int(k) % ii) for k in ks]
 
     def bump_history(self, amount: float = 1.0):
-        for (rid, c), nets in self.res.items():
-            if len(nets) > self.arch.rnodes[rid].cap:
-                key = (rid, c)
-                self.history[key] = self.history.get(key, 0.0) + amount
+        ks = np.flatnonzero(self.occ_arr > self.cap_arr)
+        if len(ks):
+            self.hist_arr[ks] += amount
+            hist = self.hist_arr
+            base = self._base
+            for k in ks:
+                base[k] = 1.0 + float(hist[k])
 
 
 def start_resources(arch: Arch, fu: FU) -> List[int]:
@@ -186,52 +243,103 @@ def _route_edge_once(
     allow_overuse: bool = False,
     avoid: Optional[Set[Tuple[int, int]]] = None,
 ):
-    arch = mrrg.arch
-    avoid = avoid or set()
+    """Elapsed-time DP with A*-style pruning from the precomputed all-pairs
+    hop-distance table: a state (rid, step k) is expanded only if the
+    destination's operand inputs are still reachable in the remaining
+    ``span - k`` cycles (``h[rid] <= span - k``).  The pruned state set is
+    closed under the legacy full-layer DP's relaxations that matter — any
+    pruned state provably cannot reach the goal — and viable states are
+    relaxed in the same ascending-rid / architecture-edge order, so paths,
+    costs and tie-breaks are bit-identical to the original blind Dijkstra/DP.
+    """
+    eng = mrrg.engine
     span = t_dst - t_src
     if span < 1:
         return None
-    reads = set(dst_fu.reads)
-    starts = start_resources(arch, src_fu)
-    # DP over elapsed steps 1..span
+    h = eng.h_to_reads(dst_fu)
+    starts = eng.starts(src_fu)
+    rem = span - 1
+    if min((h[r] for r in starts), default=UNREACH) > rem:
+        return None  # unreachable at this span, regardless of occupancy
+    ii = mrrg.ii
+    n = eng.n
+    succ = eng.succ
+    cap = eng.cap
+    sv = mrrg.slot_vals
+    base = mrrg._base
     INF = float("inf")
-    cost = {rid: INF for rid in range(len(arch.rnodes))}
+    cost = [INF] * n
     back: List[Dict[int, Optional[int]]] = [dict() for _ in range(span + 1)]
+    t1 = t_src + 1
+    cyc1 = t1 % ii
+    active: List[int] = []  # rids with finite cost, ascending (legacy order)
     for rid in starts:
-        if (rid, mrrg.cyc(t_src + 1)) in avoid:
+        if h[rid] > rem:
             continue
-        c = mrrg.rcost(rid, t_src + 1, net, allow_overuse)
-        if c < BIG:
-            if c < cost[rid]:
-                cost[rid] = c
-                back[1][rid] = None
-    for k in range(2, span + 1):
-        t = t_src + k
-        ncost = {rid: INF for rid in range(len(arch.rnodes))}
-        for rid, cprev in cost.items():
-            if cprev >= INF:
-                continue
-            node = arch.rnodes[rid]
-            nexts = list(mrrg.arch.redges[rid])
-            if node.holdable:
-                nexts.append(rid)
-            for nxt in nexts:
-                if (nxt, mrrg.cyc(t)) in avoid:
+        if avoid and (rid, cyc1) in avoid:
+            continue
+        k = rid * ii + cyc1
+        vals = sv[k]
+        if vals is not None and (net, t1) in vals:
+            c = 0.05  # same value reuse (fan-out) is nearly free
+        else:
+            over = (len(vals) if vals is not None else 0) + 1 - cap[rid]
+            if over > 0:
+                if not allow_overuse:
                     continue
-                c = mrrg.rcost(nxt, t, net, allow_overuse)
-                if c >= BIG:
+                c = base[k] + 8.0 * over
+            else:
+                c = base[k]
+        if c < cost[rid]:
+            if cost[rid] == INF:
+                active.append(rid)
+            cost[rid] = c
+            back[1][rid] = None
+    active.sort()
+    for step in range(2, span + 1):
+        t = t_src + step
+        cyc = t % ii
+        rem = span - step
+        ncost = [INF] * n
+        backk = back[step]
+        nactive: List[int] = []
+        for rid in active:
+            cprev = cost[rid]
+            for nxt in succ[rid]:
+                if h[nxt] > rem:
                     continue
+                nc = ncost[nxt]
+                if cprev + 0.05 >= nc:
+                    continue  # cannot strictly improve even at min step cost
+                if avoid and (nxt, cyc) in avoid:
+                    continue
+                k = nxt * ii + cyc
+                vals = sv[k]
+                if vals is not None and (net, t) in vals:
+                    c = 0.05
+                else:
+                    over = (len(vals) if vals is not None else 0) + 1 - cap[nxt]
+                    if over > 0:
+                        if not allow_overuse:
+                            continue
+                        c = base[k] + 8.0 * over
+                    else:
+                        c = base[k]
                 tot = cprev + c
-                if tot < ncost[nxt]:
+                if tot < nc:
+                    if nc == INF:
+                        nactive.append(nxt)
                     ncost[nxt] = tot
-                    back[k][nxt] = rid
-        cost = ncost
-        if all(v >= INF for v in cost.values()):
+                    backk[nxt] = rid
+        if not nactive:
             return None
+        nactive.sort()
+        active = nactive
+        cost = ncost
     # arrival: must sit in a readable resource at t_dst
     best_rid, best_cost = None, INF
-    for rid in reads:
-        if cost.get(rid, INF) < best_cost:
+    for rid in set(dst_fu.reads):
+        if cost[rid] < best_cost:
             best_cost = cost[rid]
             best_rid = rid
     if best_rid is None:
@@ -264,6 +372,19 @@ class Mapping:
     place: Dict[int, int] = field(default_factory=dict)  # node -> fu
     time: Dict[int, int] = field(default_factory=dict)  # node -> abs cycle
     routes: Dict[int, List[Tuple[int, int]]] = field(default_factory=dict)  # edge idx
+    route_len: int = 0  # sum(len(p) for p in routes.values()), kept incrementally
+
+    def set_route(self, idx: int, path: List[Tuple[int, int]]) -> None:
+        old = self.routes.get(idx)
+        if old is not None:
+            self.route_len -= len(old)
+        self.routes[idx] = path
+        self.route_len += len(path)
+
+    def pop_route(self, idx: int) -> List[Tuple[int, int]]:
+        path = self.routes.pop(idx)
+        self.route_len -= len(path)
+        return path
 
     @property
     def makespan(self) -> int:
@@ -315,13 +436,48 @@ class Mapping:
 # ---------------------------------------------------------------------------
 
 
+class _DfgTables:
+    """Per-DFG adjacency tables shared by all mapper passes (computed once,
+    reused by every incremental rip-up/reroute and delta-cost evaluation)."""
+
+    def __init__(self, dfg: DFG):
+        self.asap = dfg.asap()
+        self.edges_by_node: Dict[int, List[int]] = {}
+        self.intra_by_node: Dict[int, List[int]] = {}
+        self.intra_preds: Dict[int, List[int]] = {}
+        self.routable: List[Tuple[int, int, int]] = []  # (idx, src, dst)
+        for idx, e in enumerate(dfg.edges):
+            self.edges_by_node.setdefault(e.src, []).append(idx)
+            if e.dst != e.src:
+                self.edges_by_node.setdefault(e.dst, []).append(idx)
+            if dfg.nodes[e.src].op not in ("const", "input"):
+                self.routable.append((idx, e.src, e.dst))
+            if e.distance == 0:
+                self.intra_by_node.setdefault(e.src, []).append(idx)
+                if e.dst != e.src:
+                    self.intra_by_node.setdefault(e.dst, []).append(idx)
+                self.intra_preds.setdefault(e.dst, []).append(e.src)
+        self.n_routable = len(self.routable)
+
+
 class _BaseMapper:
     max_ii = 16
 
     def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 4000):
         self.arch = arch
         self.seed = seed
+        if os.environ.get("REPRO_QUICK"):
+            # reduced SA budget for the test suite's --quick path
+            time_budget = min(time_budget, 800)
         self.time_budget = time_budget  # SA/negotiation step budget per II
+        self._dfg_tables: Optional[Tuple[DFG, _DfgTables]] = None
+
+    def _tables(self, dfg: DFG) -> _DfgTables:
+        cached = self._dfg_tables
+        if cached is None or cached[0] is not dfg:
+            cached = (dfg, _DfgTables(dfg))
+            self._dfg_tables = cached
+        return cached[1]
 
     def mii(self, dfg: DFG) -> int:
         n_comp = len(dfg.compute_nodes)
@@ -339,32 +495,51 @@ class _BaseMapper:
     # -- helpers -----------------------------------------------------------
     def _fu_candidates(self, dfg: DFG, n: int) -> List[int]:
         op = dfg.nodes[n].op
-        out = []
-        for fu in self.arch.fus:
-            if op in ("const", "input", "output") or op in fu.ops:
-                out.append(fu.id)
-        return out
+        cache = getattr(self, "_fu_cand_cache", None)
+        if cache is None:
+            cache = self._fu_cand_cache = {}
+        out = cache.get(op)
+        if out is None:
+            out = [
+                fu.id for fu in self.arch.fus
+                if op in ("const", "input", "output") or op in fu.ops
+            ]
+            cache[op] = out
+        return list(out)  # callers shuffle in place
 
     def _route_node_edges(
         self, mrrg: MRRG, dfg: DFG, mapping: Mapping, nodes: Set[int], allow_overuse=False
     ) -> Tuple[bool, float]:
-        """(Re)route all edges touching ``nodes`` whose endpoints are placed."""
+        """(Re)route only the edges touching ``nodes`` whose endpoints are
+        placed — the incremental rip-up/reroute primitive behind every SA
+        move.  Edge order matches the legacy full-scan (ascending index)."""
+        tab = self._tables(dfg)
+        by_node = tab.edges_by_node
+        if len(nodes) == 1:
+            (n0,) = nodes
+            idxs = by_node.get(n0, ())
+        else:
+            s: Set[int] = set()
+            for n0 in nodes:
+                s.update(by_node.get(n0, ()))
+            idxs = sorted(s)
         total = 0.0
         ok = True
-        for idx, e in enumerate(dfg.edges):
-            if e.src not in nodes and e.dst not in nodes:
-                continue
-            if e.src not in mapping.place or e.dst not in mapping.place:
+        edges = dfg.edges
+        fus = self.arch.fus
+        place, tm = mapping.place, mapping.time
+        for idx in idxs:
+            e = edges[idx]
+            if e.src not in place or e.dst not in place:
                 continue
             if idx in mapping.routes:
-                mrrg.release(e.src, mapping.routes.pop(idx))
+                mrrg.release(e.src, mapping.pop_route(idx))
             if dfg.nodes[e.src].op in ("const", "input"):
                 continue
-            t_dst = mapping.time[e.dst] + e.distance * mapping.ii
+            t_dst = tm[e.dst] + e.distance * mapping.ii
             r = route_edge(
-                mrrg, e.src, self.arch.fus[mapping.place[e.src]],
-                self.arch.fus[mapping.place[e.dst]],
-                mapping.time[e.src], t_dst, allow_overuse=allow_overuse,
+                mrrg, e.src, fus[place[e.src]], fus[place[e.dst]],
+                tm[e.src], t_dst, allow_overuse=allow_overuse,
             )
             if r is None:
                 ok = False
@@ -372,14 +547,15 @@ class _BaseMapper:
                 continue
             path, c = r
             mrrg.reserve(e.src, path)
-            mapping.routes[idx] = path
+            mapping.set_route(idx, path)
             total += c
         return ok, total
 
     def _unroute_node(self, mrrg: MRRG, dfg: DFG, mapping: Mapping, n: int):
-        for idx, e in enumerate(dfg.edges):
-            if (e.src == n or e.dst == n) and idx in mapping.routes:
-                mrrg.release(e.src, mapping.routes.pop(idx))
+        edges = dfg.edges
+        for idx in self._tables(dfg).edges_by_node.get(n, ()):
+            if idx in mapping.routes:
+                mrrg.release(edges[idx].src, mapping.pop_route(idx))
 
 
 # ---------------------------------------------------------------------------
@@ -411,7 +587,7 @@ class SAMapper(_BaseMapper):
         temp = 2.0
         last_gain = 0
         for step in range(self.time_budget):
-            if not unplaced and not mrrg.overused() and self._all_routed(dfg, mapping):
+            if not unplaced and not mrrg.has_overuse() and self._all_routed(dfg, mapping):
                 break
             if step - last_gain > 400:
                 break  # plateau: give up at this II
@@ -430,19 +606,20 @@ class SAMapper(_BaseMapper):
                     self._place_at(mrrg, dfg, mapping, n, old[0], old[1])
             unplaced = [x for x in order if x not in mapping.place]
             temp *= 0.999
-        if unplaced or mrrg.overused() or not self._all_routed(dfg, mapping):
+        if unplaced or mrrg.has_overuse() or not self._all_routed(dfg, mapping):
             return None
         mapping.validate()
         return mapping
 
     # -- internals ----------------------------------------------------------
     def _ready_time(self, dfg: DFG, mapping: Mapping, n: int, ii: int) -> int:
-        if not hasattr(self, "_asap_cache") or self._asap_cache[0] is not dfg:
-            self._asap_cache = (dfg, dfg.asap())
-        t = self._asap_cache[1][n]
-        for e in dfg.intra_edges():
-            if e.dst == n and e.src in mapping.time:
-                t = max(t, mapping.time[e.src] + 1)
+        tab = self._tables(dfg)
+        t = tab.asap[n]
+        tm = mapping.time
+        for src in tab.intra_preds.get(n, ()):
+            ts = tm.get(src)
+            if ts is not None and ts + 1 > t:
+                t = ts + 1
         return t
 
     def _greedy_place(self, mrrg, dfg, mapping, n, rng, randomize=False) -> bool:
@@ -485,24 +662,24 @@ class SAMapper(_BaseMapper):
             del mapping.time[n]
 
     def _all_routed(self, dfg, mapping) -> bool:
-        for idx, e in enumerate(dfg.edges):
-            if dfg.nodes[e.src].op in ("const", "input"):
-                continue
-            if idx not in mapping.routes:
-                return False
-        return True
+        # routes only ever holds routable edges, so a count compare suffices
+        return len(mapping.routes) == self._tables(dfg).n_routable
 
     def _cost(self, dfg, mapping, mrrg) -> float:
-        unplaced = sum(1 for n in dfg.nodes if n not in mapping.place)
+        """Move-acceptance cost, evaluated from incrementally-maintained
+        counters (overuse, route length) — O(edges) worst case instead of a
+        full MRRG scan.  Produces the exact value of the legacy formula."""
+        tab = self._tables(dfg)
+        unplaced = len(dfg.nodes) - len(mapping.place)
         unrouted = 0
-        for idx, e in enumerate(dfg.edges):
-            if dfg.nodes[e.src].op in ("const", "input"):
-                continue
-            if e.src in mapping.place and e.dst in mapping.place and idx not in mapping.routes:
+        place, routes = mapping.place, mapping.routes
+        for idx, src, dst in tab.routable:
+            if src in place and dst in place and idx not in routes:
                 unrouted += 1
-        over = len(mrrg.overused())
-        rlen = sum(len(p) for p in mapping.routes.values())
-        return 100.0 * unplaced + 40.0 * unrouted + 25.0 * over + 0.1 * rlen
+        return (
+            100.0 * unplaced + 40.0 * unrouted
+            + 25.0 * mrrg.overuse_count() + 0.1 * mapping.route_len
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -525,11 +702,11 @@ class PathFinderMapper(SAMapper):
         for it in range(30):
             # rip up everything, re-route with current history
             for idx in list(mapping.routes):
-                mrrg.release(dfg.edges[idx].src, mapping.routes.pop(idx))
+                mrrg.release(dfg.edges[idx].src, mapping.pop_route(idx))
             ok, _ = self._route_node_edges(
                 mrrg, dfg, mapping, set(dfg.nodes), allow_overuse=True
             )
-            if ok and not mrrg.overused():
+            if ok and not mrrg.has_overuse():
                 if self._all_routed(dfg, mapping):
                     mapping.validate()
                     return mapping
@@ -639,10 +816,20 @@ class HierarchicalMapper(SAMapper):
     unit with the least routing cost; SA over whole-motif moves with
     flexible schedule templates; II++ until valid."""
 
+    def _units_cached(self, dfg: DFG) -> List["Unit"]:
+        """``units_of`` is deterministic per (mapper, dfg); cache it so motif
+        generation runs once per workload instead of once per II attempt."""
+        cached = getattr(self, "_units_cache", None)
+        if cached is None or cached[0] is not dfg:
+            self._units_cache = cached = (dfg, self.units_of(dfg))
+        return cached[1]
+
     def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 1500,
                  motif_seed: int = 0):
         super().__init__(arch, seed, time_budget)
         self.motif_seed = motif_seed
+        if os.environ.get("REPRO_QUICK"):
+            self.restarts = 4  # test-suite --quick path: fewer restarts
 
     # -- hierarchical DFG ----------------------------------------------------
     def units_of(self, dfg: DFG) -> List[Unit]:
@@ -662,7 +849,7 @@ class HierarchicalMapper(SAMapper):
         # (8-bit constant fields, §4.3) — they occupy no FU and no route
         # sort by data dependency: topological over the unit graph where
         # possible (Kahn with min-ASAP tie-break; cycles broken by ASAP)
-        asap = dfg.asap()
+        asap = self._tables(dfg).asap
         owner = {n: i for i, u in enumerate(units) for n in u.nodes}
         deps: Dict[int, Set[int]] = {i: set() for i in range(len(units))}
         for e in dfg.intra_edges():
@@ -696,7 +883,7 @@ class HierarchicalMapper(SAMapper):
         whose incident edges ALL route (Algorithm 2's 'least routing
         resource' rule); random restarts perturb order and candidate
         sampling. A short annealing fix-up runs when greedy gets close."""
-        base_units = self.units_of(dfg)
+        base_units = self._units_cached(dfg)
         for restart in range(self.restarts):
             rng = random.Random(self.seed + ii * 9173 + restart * 101)
             units = list(base_units)
@@ -720,11 +907,18 @@ class HierarchicalMapper(SAMapper):
     # -- unit placement ------------------------------------------------------
     restarts = 10
 
-    def _locality_key(self, dfg, mapping, u, fu_id):
-        """Prefer tiles close to already-placed neighbours of the unit."""
+    def _neighbour_tiles(self, dfg, mapping, u) -> List[Tuple[int, int]]:
+        """Tiles of already-placed neighbours of the unit (one entry per
+        incident intra edge, as the legacy per-edge scan counted them)."""
+        tab = self._tables(dfg)
         members = set(u.nodes)
+        idxs: Set[int] = set()
+        for n in u.nodes:
+            idxs.update(tab.intra_by_node.get(n, ()))
         tiles = []
-        for e in dfg.intra_edges():
+        edges = dfg.edges
+        for idx in idxs:
+            e = edges[idx]
             other = None
             if e.dst in members and e.src not in members:
                 other = e.src
@@ -732,6 +926,12 @@ class HierarchicalMapper(SAMapper):
                 other = e.dst
             if other is not None and other in mapping.place:
                 tiles.append(self.arch.fus[mapping.place[other]].tile)
+        return tiles
+
+    def _locality_key(self, dfg, mapping, u, fu_id, tiles=None):
+        """Prefer tiles close to already-placed neighbours of the unit."""
+        if tiles is None:
+            tiles = self._neighbour_tiles(dfg, mapping, u)
         if not tiles:
             return 0
         t = self.arch.fus[fu_id].tile
@@ -743,21 +943,23 @@ class HierarchicalMapper(SAMapper):
         plcs = [p_ for p_ in plcs if self._span_ok(dfg, mapping, p_)]
         # earliest feasible time first (list-scheduling); then spread load
         # across tiles (router bandwidth!), then locality
+        fus = self.arch.fus
+        fu_load, tile_load = mrrg.fu_load, mrrg.tile_load
+
         def busy(plc):
             fu = plc[0][1]
-            tile = self.arch.fus[fu].tile
-            on_fu = sum(1 for (f, _c) in mrrg.fu_busy if f == fu)
-            on_tile = sum(
-                1 for (f, _c) in mrrg.fu_busy if self.arch.fus[f].tile == tile
+            return (
+                2.0 * fu_load.get(fu, 0)
+                + 1.0 * tile_load.get(fus[fu].tile, 0)
             )
-            return 2.0 * on_fu + 1.0 * on_tile
         if not plcs:
             return False
+        nbr_tiles = self._neighbour_tiles(dfg, mapping, u)
         t0 = min(max(t for _, _, t in plc) for plc in plcs)
         # exploration order: time-bucketed with balance tie-break
         plcs.sort(key=lambda plc: (
             max(t for _, _, t in plc),
-            busy(plc) + self._locality_key(dfg, mapping, u, plc[0][1]),
+            busy(plc) + self._locality_key(dfg, mapping, u, plc[0][1], nbr_tiles),
         ))
         best, best_s = None, None
         n_feasible = 0
@@ -773,7 +975,7 @@ class HierarchicalMapper(SAMapper):
                 0.5 * (max(t for _, _, t in plc) - t0)
                 + 1.0 * busy(plc)
                 + 1.0 * c
-                + 2.0 * self._locality_key(dfg, mapping, u, plc[0][1])
+                + 2.0 * self._locality_key(dfg, mapping, u, plc[0][1], nbr_tiles)
             )
             if best_s is None or score < best_s:
                 best, best_s = plc, score
@@ -785,9 +987,44 @@ class HierarchicalMapper(SAMapper):
         c = self._try_placement_strict(mrrg, dfg, mapping, best)
         return c is not None
 
+    def _reachable_ok(self, mrrg, dfg, mapping, plc) -> bool:
+        """Exact unreachable-pruning from the distance tables: a candidate
+        with an incident edge whose span is below the fabric's minimum
+        route latency is guaranteed to fail routing — skip it before paying
+        for placement + route attempts.  One-sided: never skips a candidate
+        the router could accept."""
+        times = {n: t for n, _, t in plc}
+        fus_of = {n: fu for n, fu, _ in plc}
+        tab = self._tables(dfg)
+        eng = mrrg.engine
+        idxs: Set[int] = set()
+        for n in times:
+            idxs.update(tab.edges_by_node.get(n, ()))
+        edges = dfg.edges
+        arch_fus = self.arch.fus
+        tm, place = mapping.time, mapping.place
+        for idx in idxs:
+            e = edges[idx]
+            if dfg.nodes[e.src].op in ("const", "input"):
+                continue
+            ts = times.get(e.src, tm.get(e.src))
+            td = times.get(e.dst, tm.get(e.dst))
+            if ts is None or td is None:
+                continue
+            span = td + e.distance * mapping.ii - ts
+            if span < 1:
+                return False
+            f_s = fus_of.get(e.src, place.get(e.src))
+            f_d = fus_of.get(e.dst, place.get(e.dst))
+            if eng.min_route_span(arch_fus[f_s], arch_fus[f_d]) > span:
+                return False
+        return True
+
     def _try_placement_strict(self, mrrg, dfg, mapping, plc):
         """Like _try_placement but rejects unless every incident placed
         edge routes."""
+        if not self._reachable_ok(mrrg, dfg, mapping, plc):
+            return None
         for n, fu, t in plc:
             if not mrrg.fu_free(fu, t):
                 return None
@@ -804,31 +1041,38 @@ class HierarchicalMapper(SAMapper):
         return c
 
     def _unit_ready(self, dfg: DFG, mapping: Mapping, u: Unit) -> int:
-        if not hasattr(self, "_asap_cache") or self._asap_cache[0] is not dfg:
-            self._asap_cache = (dfg, dfg.asap())
-        asap = self._asap_cache[1]
+        tab = self._tables(dfg)
         members = set(u.nodes)
-        t = min(asap[n] for n in members)
-        for e in dfg.intra_edges():
-            if e.dst in members and e.src not in members and e.src in mapping.time:
-                t = max(t, mapping.time[e.src] + 1)
+        t = min(tab.asap[n] for n in members)
+        tm = mapping.time
+        for n in u.nodes:
+            for src in tab.intra_preds.get(n, ()):
+                if src not in members:
+                    ts = tm.get(src)
+                    if ts is not None and ts + 1 > t:
+                        t = ts + 1
         return t
 
     def _span_ok(self, dfg, mapping, plc) -> bool:
         times = {n: t for n, _, t in plc}
         fus = {n: fu for n, fu, _ in plc}
-        for e in dfg.intra_edges():
+        tab = self._tables(dfg)
+        idxs: Set[int] = set()
+        for n in times:
+            idxs.update(tab.intra_by_node.get(n, ()))
+        edges = dfg.edges
+        arch_fus = self.arch.fus
+        for idx in idxs:
+            e = edges[idx]
             ts = times.get(e.src, mapping.time.get(e.src))
             td = times.get(e.dst, mapping.time.get(e.dst))
             if ts is None or td is None:
-                continue
-            if e.src not in times and e.dst not in times:
                 continue
             if dfg.nodes[e.src].op in ("const", "input"):
                 continue
             f_s = fus.get(e.src, mapping.place.get(e.src))
             f_d = fus.get(e.dst, mapping.place.get(e.dst))
-            if td - ts < min_span(self.arch, self.arch.fus[f_s], self.arch.fus[f_d]):
+            if td - ts < min_span(self.arch, arch_fus[f_s], arch_fus[f_d]):
                 return False
         return True
 
@@ -951,7 +1195,7 @@ class HierarchicalMapper(SAMapper):
         )
         return (
             len(mapping.place) == need
-            and not mrrg.overused()
+            and not mrrg.has_overuse()
             and self._all_routed(dfg, mapping)
         )
 
@@ -1002,14 +1246,14 @@ class PathFinderMapper2(NodeGreedyMapper):
             mrrg = MRRG(self.arch, ii)
             mapping = Mapping(self.arch, dfg, ii)
             ok = True
-            for u in self.units_of(dfg):
+            for u in self._units_cached(dfg):
                 if not self._place_unit_overuse(mrrg, dfg, mapping, u, rng):
                     ok = False
                     break
             if not ok:
                 continue
             for it in range(self.neg_rounds):
-                if not mrrg.overused() and self._all_routed(dfg, mapping):
+                if not mrrg.has_overuse() and self._all_routed(dfg, mapping):
                     need = sum(1 for n in dfg.nodes.values()
                                if n.op not in ("const", "input"))
                     if len(mapping.place) == need:
@@ -1020,7 +1264,7 @@ class PathFinderMapper2(NodeGreedyMapper):
                             break
                 mrrg.bump_history(1.0)
                 for idx in list(mapping.routes):
-                    mrrg.release(dfg.edges[idx].src, mapping.routes.pop(idx))
+                    mrrg.release(dfg.edges[idx].src, mapping.pop_route(idx))
                 self._route_node_edges(
                     mrrg, dfg, mapping, set(dfg.nodes), allow_overuse=True
                 )

@@ -1,0 +1,122 @@
+"""Shared fast routing engine for all Track-A mappers.
+
+The per-edge router in :mod:`repro.core.mapper` performs an elapsed-time
+DP/Dijkstra over the time-extended MRRG.  Profiling shows the mappers spend
+essentially all of their time in that inner loop, and that the overwhelming
+majority of explored states can never reach the destination in the cycles
+remaining.  This module precomputes, once per :class:`~repro.core.arch.Arch`,
+the static structures that let the router prune those states up front:
+
+* ``succ``       — successor lists over routing resources, with the holdable
+  self-loop appended **last** so the pruned DP relaxes states in exactly the
+  same order as the original full-layer DP (bit-identical results);
+* ``dist``       — all-pairs minimum hop distance between routing resources
+  (numpy ``int32``; ``UNREACH`` for disconnected pairs).  ``dist[u, v]`` is an
+  admissible lower bound on the elapsed cycles needed to move a value from
+  ``u`` to ``v``, so any state whose remaining-cycle budget is smaller can be
+  discarded without changing the optimum (A*-style unreachable pruning);
+* per-FU caches — ``starts(fu)`` (the resources a value lands on one cycle
+  after production, see :func:`repro.core.mapper.start_resources`) and
+  ``h_to_reads(fu)`` (minimum hops from every resource to any resource the
+  FU's operand mux can read: the A* heuristic / pruning table).
+
+Engines are cached on the architecture object itself (``engine_for``), so the
+distance tables are computed once per process per fabric and shared by every
+MRRG / mapper instance, including the spatial mapper's II=1 runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+UNREACH = 1 << 20  # larger than any feasible span; small enough to add safely
+
+
+class RoutingEngine:
+    """Precomputed per-``Arch`` routing structures (see module docstring)."""
+
+    def __init__(self, arch):
+        self.arch = arch
+        n = len(arch.rnodes)
+        self.n = n
+        # Successor lists in the exact order the legacy router relaxed them:
+        # architecture edges first, then the holdable self-loop.
+        self.succ: List[Tuple[int, ...]] = [
+            tuple(arch.redges[r.id]) + ((r.id,) if r.holdable else ())
+            for r in arch.rnodes
+        ]
+        self.cap: List[int] = [r.cap for r in arch.rnodes]
+        self.holdable: List[bool] = [r.holdable for r in arch.rnodes]
+        self.dist = self._all_pairs_hops()
+        self._starts: Dict[int, List[int]] = {}
+        self._h: Dict[int, List[int]] = {}
+        self._min_fu_span: Dict[Tuple[int, int], int] = {}
+
+    # -- static tables -------------------------------------------------------
+    def _all_pairs_hops(self) -> np.ndarray:
+        n = self.n
+        dist = np.full((n, n), UNREACH, dtype=np.int32)
+        for s in range(n):
+            row = dist[s]
+            row[s] = 0
+            frontier = [s]
+            d = 0
+            while frontier:
+                d += 1
+                nxt = []
+                for u in frontier:
+                    for v in self.succ[u]:
+                        if row[v] > d:
+                            row[v] = d
+                            nxt.append(v)
+                frontier = nxt
+        return dist
+
+    def starts(self, fu) -> List[int]:
+        """Cached :func:`repro.core.mapper.start_resources` for ``fu``."""
+        out = self._starts.get(fu.id)
+        if out is None:
+            from repro.core.mapper import start_resources
+
+            out = start_resources(self.arch, fu)
+            self._starts[fu.id] = out
+        return out
+
+    def h_to_reads(self, fu) -> List[int]:
+        """Minimum hops from every resource to any operand-mux input of
+        ``fu`` — the admissible A* heuristic for routes ending at ``fu``."""
+        h = self._h.get(fu.id)
+        if h is None:
+            if fu.reads:
+                h = np.min(self.dist[:, list(fu.reads)], axis=1).tolist()
+            else:
+                h = [UNREACH] * self.n
+            self._h[fu.id] = h
+        return h
+
+    def min_route_span(self, src_fu, dst_fu) -> int:
+        """Exact minimum elapsed cycles for a value from ``src_fu`` to reach
+        an operand input of ``dst_fu`` (1 cycle to the start resource plus
+        the shortest hop path).  Used for unreachable pruning."""
+        key = (src_fu.id, dst_fu.id)
+        span = self._min_fu_span.get(key)
+        if span is None:
+            h = self.h_to_reads(dst_fu)
+            best = min((h[r] for r in self.starts(src_fu)), default=UNREACH)
+            span = 1 + best if best < UNREACH else UNREACH
+            self._min_fu_span[key] = span
+        return span
+
+
+def engine_for(arch) -> RoutingEngine:
+    """Return the (cached) routing engine for ``arch``.
+
+    The engine is attached to the architecture object so every mapper /
+    MRRG built on the same fabric shares one set of distance tables.
+    """
+    eng = getattr(arch, "_routing_engine", None)
+    if eng is None:
+        eng = RoutingEngine(arch)
+        arch._routing_engine = eng
+    return eng

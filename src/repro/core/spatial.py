@@ -207,6 +207,8 @@ def _segment_dfg(dfg: DFG, nodes: List[int], tag: int) -> Tuple[DFG, int]:
 
 def map_spatial(dfg: DFG, arch: Optional[Arch] = None, seed: int = 0) -> SpatialResult:
     arch = arch or make_arch("spatial4x4")
+    # II=1 segment P&R shares the per-fabric routing engine (distance
+    # tables) with the modulo mappers via the cache on the Arch instance.
     mapper = SpatialMapper(arch, seed=seed)
     whole = mapper.map(dfg)
     if whole is not None:

@@ -1,14 +1,17 @@
-"""Mapping + routing + cycle-simulator verification on all architectures."""
+"""Mapping + routing + cycle-simulator verification on all architectures.
+
+Workload DFGs and architectures come from the session-scoped fixtures in
+conftest.py, so graph/fabric construction (and the routing engine's
+distance tables) are built once per session and shared across tests.
+"""
 import pytest
 
-from repro.core.arch import make_arch
 from repro.core.mapper import (
     HierarchicalMapper, Mapping, NodeGreedyMapper, PathFinderMapper2,
     motif_templates,
 )
 from repro.core.simulate import simulate
 from repro.core.spatial import map_spatial
-from repro.core.workloads import build_workload, workload_by_name
 
 KERNELS = [("atax", 2), ("dwconv", 1), ("jacobi", 1)]
 
@@ -28,40 +31,40 @@ def test_motif_templates_dependency_consistent():
 
 
 @pytest.mark.parametrize("name,unroll", KERNELS)
-def test_plaid_mapping_valid_and_simulates(name, unroll):
-    g = build_workload(workload_by_name(name, unroll))
-    m = HierarchicalMapper(make_arch("plaid2x2"), seed=0).map(g)
+def test_plaid_mapping_valid_and_simulates(name, unroll, workload_dfg, arch):
+    g = workload_dfg(name, unroll)
+    m = HierarchicalMapper(arch("plaid2x2"), seed=0).map(g)
     assert m is not None
     m.validate()
     simulate(m, iterations=3)
 
 
 @pytest.mark.parametrize("name,unroll", KERNELS)
-def test_st_mapping_valid_and_simulates(name, unroll):
-    g = build_workload(workload_by_name(name, unroll))
-    m = NodeGreedyMapper(make_arch("st4x4"), seed=0).map(g)
+def test_st_mapping_valid_and_simulates(name, unroll, workload_dfg, arch):
+    g = workload_dfg(name, unroll)
+    m = NodeGreedyMapper(arch("st4x4"), seed=0).map(g)
     assert m is not None
     m.validate()
     simulate(m, iterations=3)
 
 
-def test_pathfinder_maps_something():
-    g = build_workload(workload_by_name("atax", 2))
-    m = PathFinderMapper2(make_arch("st4x4"), seed=0).map(g)
+def test_pathfinder_maps_something(workload_dfg, arch):
+    g = workload_dfg("atax", 2)
+    m = PathFinderMapper2(arch("st4x4"), seed=0).map(g)
     assert m is not None
     m.validate()
 
 
-def test_spatial_produces_cycles():
-    g = build_workload(workload_by_name("dwconv", 1))
+def test_spatial_produces_cycles(workload_dfg):
+    g = workload_dfg("dwconv", 1)
     r = map_spatial(g)
     assert r.cycles(64) > 64
     for m in r.segments:
         assert m.ii == 1
 
 
-def test_ii_at_least_mii():
-    g = build_workload(workload_by_name("atax", 2))
-    mapper = HierarchicalMapper(make_arch("plaid2x2"), seed=0)
+def test_ii_at_least_mii(workload_dfg, arch):
+    g = workload_dfg("atax", 2)
+    mapper = HierarchicalMapper(arch("plaid2x2"), seed=0)
     m = mapper.map(g)
     assert m.ii >= mapper.mii(g)

@@ -1,6 +1,10 @@
-"""Algorithm 1 unit + property tests (hypothesis over random DAGs)."""
+"""Algorithm 1 unit + property tests (hypothesis over random DAGs).
+
+``hypothesis`` is optional: without it the shim replays a fixed seeded
+sample of each strategy (see tests/_hypothesis_shim.py).
+"""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.dfg import DFG, random_dag
 from repro.core.motifs import (

@@ -14,12 +14,23 @@ SHAPE = ShapeSpec("smoke", 32, 2, "train")
 
 
 def test_train_loss_decreases(tmp_path):
+    """Deterministic loss-drop check.
+
+    The seed version ran 12 steps at lr=5e-3 under the default 100-step
+    warmup, so the effective learning rate never left the ramp and the
+    mean loss drifted *up* on some seeds.  Fixed by: a 2-step warmup, a
+    higher peak lr (1e-2), 20 steps, and 5-step windows.  The run is fully
+    deterministic (seeded init + seeded data), and measures a 0.128 drop
+    between window means; the 0.02 threshold below is ~6x under that, so
+    the test fails only on a real regression, not on numeric jitter.
+    """
     cfg = smoke_config("llama3_2_3b").replace(n_layers=2)
     run = RunConfig(model=cfg, shape=SHAPE, checkpoint_dir=str(tmp_path),
-                    checkpoint_every=0, learning_rate=5e-3, total_steps=30)
-    out = train(run, steps=12)
+                    checkpoint_every=0, learning_rate=1e-2, warmup_steps=2,
+                    total_steps=24)
+    out = train(run, steps=20)
     assert np.isfinite(out["losses"]).all()
-    assert np.mean(out["losses"][-3:]) < np.mean(out["losses"][:3])
+    assert np.mean(out["losses"][-5:]) < np.mean(out["losses"][:5]) - 0.02
 
 
 def test_checkpoint_resume_bit_identical(tmp_path):
