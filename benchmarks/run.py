@@ -232,12 +232,22 @@ def bench_mapper_speed():
         emit("bench_mapper_speed", 0, "SKIP(no quick runs recorded)")
         return
     latest = quick_runs[-1]
-    ref = data.get("reference", {}).get("seed_quick_wall_s")
-    speedup = f" {ref / latest['wall_s']:.1f}x vs seed {ref}s" if ref else ""
+    refs = data.get("reference", {})
+    ref = refs.get("seed_quick_wall_s")
+    # normalize per workload: the quick set grew from 6 to 10 workloads
+    # (PR 2), so raw wall-clock is not comparable across bench entries
+    ref_n = refs.get("seed_quick_workloads", 6)
+    run_n = latest.get("workloads_run") or ref_n
+    speedup = ""
+    if ref:
+        x = (ref / ref_n) / (latest["wall_s"] / run_n)
+        speedup = f" {x:.1f}x/workload vs seed {ref}s/{ref_n}"
+    # numeric metric is per-workload for the same reason: keeps the trend
+    # column comparable across quick-set size changes
     emit(
-        "bench_mapper_speed", latest["wall_s"] * 1e6,
-        f"collect --quick wall={latest['wall_s']}s jobs={latest['jobs']}"
-        f"{speedup} (target >=5x)",
+        "bench_mapper_speed", latest["wall_s"] / run_n * 1e6,
+        f"collect --quick wall={latest['wall_s']}s jobs={latest['jobs']} "
+        f"workloads={run_n}{speedup} (target >=5x)",
     )
 
 

@@ -10,27 +10,36 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-# --- Track A: Plaid CGRA toolchain ----------------------------------------
-from repro.core.arch import make_arch
-from repro.core.mapper import HierarchicalMapper
+# --- Track A: Plaid CGRA toolchain (one front door: repro.compiler) --------
+import tempfile
+
+from repro.compiler import CompileResult, compile, job_grid, list_mappers
 from repro.core.motifs import generate_motifs, motif_cover_stats
 from repro.core.power_area import energy_uj, headline_ratios
-from repro.core.simulate import simulate
 from repro.core.workloads import build_workload, workload_by_name
 
 print("=== Track A: Plaid (paper-faithful) ===")
+print("registered mappers:", list_mappers())
+print("evaluation grid:", job_grid())
+
 w = workload_by_name("atax", 2)
 g = build_workload(w)
 motifs, standalone = generate_motifs(g, seed=1)
-print("motif cover:", motif_cover_stats(g, motifs))
+print("Algorithm-1 motif cover:", motif_cover_stats(g, motifs))
 
-mapping = HierarchicalMapper(make_arch("plaid2x2"), seed=0).map(g)
-print(f"mapped onto Plaid 2x2: II={mapping.ii}, makespan={mapping.makespan}")
-simulate(mapping, iterations=3)
-print("cycle-accurate simulation matches the DFG oracle ✓")
-cycles = mapping.cycles(w.iterations)
-print(f"{w.iterations} iterations -> {cycles} cycles, "
-      f"{energy_uj('plaid2x2', cycles):.3f} µJ on the Plaid fabric")
+result = compile("atax", unroll=2, arch="plaid2x2", mapper="hierarchical",
+                 seed=0, verify=True)
+print(f"compiled onto Plaid 2x2: II={result.ii}, makespan={result.makespan}, "
+      f"verified={result.verified}, stage timings={ {k: round(v, 3) for k, v in result.timings.items()} }")
+
+# the artifact round-trips through JSON and re-verifies WITHOUT re-running P&R
+with tempfile.NamedTemporaryFile(suffix=".json") as tf:
+    result.save(tf.name)
+    loaded = CompileResult.load(tf.name)
+loaded.simulate(iterations=3)
+print("loaded artifact re-simulates against the DFG oracle ✓ (no P&R re-run)")
+print(f"{w.iterations} iterations -> {result.cycles} cycles, "
+      f"{energy_uj('plaid2x2', result.cycles):.3f} µJ on the Plaid fabric")
 print("derived headline ratios:", {k: round(v, 3) for k, v in headline_ratios().items()})
 
 # --- Track B: the LM framework ---------------------------------------------

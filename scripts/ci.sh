@@ -17,6 +17,17 @@ else
     timeout "$BUDGET" python -m pytest -x -q --quick
 fi
 
+echo "== compiler CLI smoke: every registered mapper on one workload =="
+ART_DIR=$(mktemp -d /tmp/ci_artifacts.XXXXXX)
+timeout "$BUDGET" python -m repro.compiler compile atax -u 2 --all-jobs \
+    --out-dir "$ART_DIR"
+# artifact IIs must match golden, and a loaded artifact must re-simulate
+# against the DFG oracle WITHOUT re-running place & route
+python -m repro.compiler diff --golden tests/golden_ii_quick.json "$ART_DIR"
+python -m repro.compiler inspect --verify \
+    "$ART_DIR"/atax_u2__plaid.json "$ART_DIR"/atax_u2__st.json \
+    "$ART_DIR"/atax_u2__spatial.json
+
 echo "== collect --quick (budget ${BUDGET}s) =="
 OUT=$(mktemp /tmp/ci_results.XXXXXX.json)
 rm -f "$OUT"   # collect resumes from existing files; start fresh

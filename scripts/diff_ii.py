@@ -1,53 +1,40 @@
 #!/usr/bin/env python
 """Diff collected mapper IIs against a checked-in golden file.
 
-Usage:  python scripts/diff_ii.py <results.json> <golden_ii.json>
+Usage:  python scripts/diff_ii.py <results.json | artifact | artifact-dir> <golden_ii.json>
+
+Thin wrapper over ``repro.compiler.cli`` — the first argument may be a
+collect results cache (``results.json``), a single ``CompileResult``
+artifact, or a directory of artifacts; all are normalized to the same
+``{workload key: {job: ii}}`` map before diffing.
 
 Fails (exit 1) if any workload/mapper pair maps to a HIGHER II than the
 golden record, or fails to map where the golden run mapped — i.e. a silent
 mapping-quality regression.  Lower IIs are reported as improvements and
-pass.  Workloads missing from the results (e.g. a partial run) are
-reported and fail; mappers where the golden itself is null pass by
-definition.
+pass.  For a results cache, golden workloads missing from the results fail;
+for artifacts (a deliberately partial view) they are skipped.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> int:
     if len(sys.argv) != 3:
         print(__doc__)
         return 2
-    with open(sys.argv[1]) as f:
-        results = json.load(f)
-    with open(sys.argv[2]) as f:
+    from repro.compiler.cli import _is_artifact, diff_ii_maps, load_ii_results
+
+    results_path, golden_path = sys.argv[1], sys.argv[2]
+    results = load_ii_results(results_path)
+    with open(golden_path) as f:
         golden = json.load(f)
-    bad = better = same = 0
-    for key, want_ii in sorted(golden.items()):
-        rec = results.get(key)
-        if rec is None:
-            print(f"MISSING {key}: not in results")
-            bad += 1
-            continue
-        got_ii = rec["ii"] if isinstance(rec, dict) and "ii" in rec else rec
-        for mapper, want in sorted(want_ii.items()):
-            got = got_ii.get(mapper)
-            if want is None:
-                same += 1  # golden found nothing; anything is no worse
-            elif got is None:
-                print(f"REGRESSION {key}/{mapper}: golden II {want}, got None")
-                bad += 1
-            elif got > want:
-                print(f"REGRESSION {key}/{mapper}: II {want} -> {got}")
-                bad += 1
-            elif got < want:
-                print(f"improved {key}/{mapper}: II {want} -> {got}")
-                better += 1
-            else:
-                same += 1
-    print(f"ii-diff: {same} identical, {better} improved, {bad} regressed")
+    require_all = not (os.path.isdir(results_path) or _is_artifact(results_path))
+    bad = diff_ii_maps(results, golden, require_all=require_all)
     return 1 if bad else 0
 
 

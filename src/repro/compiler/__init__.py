@@ -1,0 +1,56 @@
+"""``repro.compiler`` — the unified Plaid toolchain front-end.
+
+    from repro.compiler import compile
+
+    result = compile("atax", unroll=2, arch="plaid2x2", mapper="hierarchical")
+    result.save("atax_u2.json")
+    loaded = repro.compiler.CompileResult.load("atax_u2.json")
+    loaded.simulate(iterations=3)   # re-verifies without re-running P&R
+
+Components plug in through the registries (:mod:`repro.compiler.registry`):
+``@register_mapper`` / ``@register_arch`` make a new mapper or fabric
+available to :func:`compile`, the collect grid, and the CLI
+(``python -m repro.compiler``) without touching pipeline internals.
+
+The package ``__init__`` is lazy (PEP 562): ``repro.core.arch`` registers
+its builders via ``repro.compiler.registry`` at import time, which triggers
+this module — importing the pipeline eagerly here would close an import
+cycle back into ``repro.core``.
+"""
+from repro.compiler.registry import (  # noqa: F401  (leaf-level, safe eager)
+    ARCHES,
+    MAPPERS,
+    Registry,
+    RegistryError,
+    register_arch,
+    register_mapper,
+)
+
+_LAZY = {
+    "compile": ("repro.compiler.pipeline", "compile"),
+    "compile_workload": ("repro.compiler.pipeline", "compile"),
+    "job_grid": ("repro.compiler.pipeline", "job_grid"),
+    "CompileResult": ("repro.compiler.artifact", "CompileResult"),
+    "ARTIFACT_SCHEMA": ("repro.compiler.artifact", "ARTIFACT_SCHEMA"),
+    # registry lookups go through the pipeline module so that the built-in
+    # mappers/arches are registered before the first query
+    "get_mapper": ("repro.compiler.pipeline", "get_mapper"),
+    "get_arch": ("repro.compiler.pipeline", "get_arch"),
+    "list_mappers": ("repro.compiler.pipeline", "list_mappers"),
+    "list_archs": ("repro.compiler.pipeline", "list_archs"),
+}
+
+__all__ = sorted(
+    ["Registry", "RegistryError", "register_arch", "register_mapper"]
+    + list(_LAZY)
+)
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

@@ -1,0 +1,7 @@
+"""``python -m repro.compiler`` → the plaid-compile CLI."""
+import sys
+
+from repro.compiler.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,245 @@
+"""Serializable mapping artifacts.
+
+A :class:`CompileResult` is the JSON-round-trippable output of
+:func:`repro.compiler.compile`: the headline numbers (II, cycles, makespan),
+per-stage timings, motif-cover statistics, the **full** placement/routing
+mapping (including the DFG it maps, so segments produced by the spatial
+partitioner round-trip too), and arch + mapper + seed provenance.
+
+Because the mapping itself is stored, a loaded artifact can be re-verified
+with :meth:`CompileResult.simulate` — the cycle-accurate simulator replays
+the configuration against the DFG oracle — **without re-running place &
+route**.  This is what lets a results cache / serving tier hand out mappings
+and still prove them correct on the consumer side.
+
+Schema (``repro.compiler/artifact@1``)::
+
+    {
+      "schema":   "repro.compiler/artifact@1",
+      "workload": {"name", "unroll", "iterations", "domain"} | {"dfg_name"},
+      "arch":     "plaid2x2",          # registered arch name
+      "mapper":   "hierarchical",      # registered mapper name
+      "seed":     0,
+      "budget":   null | int,          # SA/negotiation step budget override
+      "ii":       int | null,          # null = mapper found no mapping
+      "cycles":   int | null,
+      "makespan": int | null,
+      "timings":  {"frontend": s, "pnr": s, "verify": s, "total": s},
+      "motifs":   {"n_units", "fanout", "fanin", "unicast", "single"} | null,
+      "mappings": [{"dfg": DFG.to_json(), "ii", "place", "time", "routes",
+                    "makespan"}],      # one per segment (spatial) else one
+      "spatial":  {"segments", "extra_mem_ops", "analytic"} | null,
+      "verified": true | false | null, # null = verification not requested
+      "provenance": {"created_utc", "repro_version"}
+    }
+
+``place``/``time``/``routes`` keys are node / edge indices (stringified by
+JSON; restored to ``int`` on load).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+ARTIFACT_SCHEMA = "repro.compiler/artifact@1"
+REPRO_VERSION = "0.2.0"
+
+
+def mapping_to_record(mapping) -> Dict[str, object]:
+    """Serialize a :class:`~repro.core.mapper.Mapping` (with its DFG)."""
+    return {
+        "dfg": mapping.dfg.to_json(),
+        "ii": mapping.ii,
+        "makespan": mapping.makespan,
+        "place": {int(n): int(fu) for n, fu in mapping.place.items()},
+        "time": {int(n): int(t) for n, t in mapping.time.items()},
+        "routes": {
+            int(idx): [[int(rid), int(t)] for rid, t in path]
+            for idx, path in mapping.routes.items()
+        },
+    }
+
+
+def normalize_record(rec: Dict[str, object]) -> Dict[str, object]:
+    """Coerce a JSON-decoded mapping record back to canonical in-memory
+    form (string keys -> ints, route steps as 2-lists) — the single place
+    that knows the record's key/value types; shared by ``from_json`` and
+    ``mapping_from_record`` so a load -> to_json round-trip is
+    value-identical to :func:`mapping_to_record` output."""
+    return {
+        "dfg": rec["dfg"],
+        "ii": int(rec["ii"]),
+        "makespan": int(rec["makespan"]),
+        "place": {int(n): int(fu) for n, fu in rec["place"].items()},
+        "time": {int(n): int(t) for n, t in rec["time"].items()},
+        "routes": {
+            int(idx): [[int(rid), int(t)] for rid, t in path]
+            for idx, path in rec["routes"].items()
+        },
+    }
+
+
+def mapping_from_record(rec: Dict[str, object], arch_name: str):
+    """Rebuild a validated :class:`~repro.core.mapper.Mapping` from a
+    record — no place & route runs; ``Mapping.validate()`` re-checks every
+    structural invariant (placement legality, route presence/timing,
+    modulo-slot capacity) before the mapping is handed out."""
+    from repro.core.arch import make_arch
+    from repro.core.dfg import DFG
+    from repro.core.mapper import Mapping
+
+    rec = normalize_record(rec)
+    dfg = DFG.from_json(rec["dfg"])
+    m = Mapping(make_arch(arch_name), dfg, rec["ii"])
+    m.place = dict(rec["place"])
+    m.time = dict(rec["time"])
+    for idx, path in rec["routes"].items():
+        m.set_route(idx, [(rid, t) for rid, t in path])
+    m.validate()
+    return m
+
+
+@dataclass
+class CompileResult:
+    """See module docstring for the on-disk schema."""
+
+    arch: str
+    mapper: str
+    seed: int
+    budget: Optional[int] = None
+    workload: Dict[str, object] = field(default_factory=dict)
+    ii: Optional[int] = None
+    cycles: Optional[int] = None
+    makespan: Optional[int] = None
+    timings: Dict[str, float] = field(default_factory=dict)
+    motifs: Optional[Dict[str, int]] = None
+    mappings: List[Dict[str, object]] = field(default_factory=list)
+    spatial: Optional[Dict[str, object]] = None
+    verified: Optional[bool] = None
+    provenance: Dict[str, object] = field(default_factory=dict)
+
+    # -- identity ----------------------------------------------------------
+    @property
+    def key(self) -> str:
+        """Workload key as used by the collect cache / golden files."""
+        w = self.workload
+        if "name" in w and "unroll" in w:
+            return f"{w['name']}_u{w['unroll']}"
+        return str(w.get("dfg_name", "dfg"))
+
+    @property
+    def mapped(self) -> bool:
+        return bool(self.mappings) or (
+            self.spatial is not None and self.spatial.get("analytic")
+        )
+
+    # -- JSON round-trip ---------------------------------------------------
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "schema": ARTIFACT_SCHEMA,
+            "workload": self.workload,
+            "arch": self.arch,
+            "mapper": self.mapper,
+            "seed": self.seed,
+            "budget": self.budget,
+            "ii": self.ii,
+            "cycles": self.cycles,
+            "makespan": self.makespan,
+            "timings": self.timings,
+            "motifs": self.motifs,
+            "mappings": self.mappings,
+            "spatial": self.spatial,
+            "verified": self.verified,
+            "provenance": self.provenance,
+        }
+
+    @classmethod
+    def from_json(cls, data: Dict[str, object]) -> "CompileResult":
+        schema = data.get("schema")
+        if schema != ARTIFACT_SCHEMA:
+            raise ValueError(
+                f"unsupported artifact schema {schema!r} "
+                f"(expected {ARTIFACT_SCHEMA!r})"
+            )
+        mappings = [normalize_record(rec) for rec in data.get("mappings", [])]
+        return cls(
+            arch=data["arch"],
+            mapper=data["mapper"],
+            seed=int(data["seed"]),
+            budget=data.get("budget"),
+            workload=data.get("workload") or {},
+            ii=data.get("ii"),
+            cycles=data.get("cycles"),
+            makespan=data.get("makespan"),
+            timings=data.get("timings") or {},
+            motifs=data.get("motifs"),
+            mappings=mappings,
+            spatial=data.get("spatial"),
+            verified=data.get("verified"),
+            provenance=data.get("provenance") or {},
+        )
+
+    def save(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CompileResult":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    # -- re-verification (no P&R) ------------------------------------------
+    def rebuild_mappings(self) -> List[object]:
+        """Live, validated :class:`Mapping` objects for every stored record
+        (one per spatial segment; exactly one for modulo mappers)."""
+        return [mapping_from_record(rec, self.arch) for rec in self.mappings]
+
+    def simulate(self, iterations: int = 3) -> List[Dict[Tuple[int, int], float]]:
+        """Cycle-accurately execute the stored mapping(s) against the DFG
+        reference oracle; returns the per-(node, iteration) value dict of
+        each mapping.  Raises if no routed mapping was stored (mapper
+        failure, or the spatial analytic fallback)."""
+        from repro.core.simulate import simulate as _simulate
+
+        if not self.mappings:
+            raise ValueError(
+                f"artifact {self.key}/{self.mapper} holds no routed mapping "
+                "to simulate"
+            )
+        return [
+            _simulate(m, iterations=iterations) for m in self.rebuild_mappings()
+        ]
+
+    # -- display -----------------------------------------------------------
+    def summary(self) -> Dict[str, object]:
+        out = {
+            "key": self.key,
+            "arch": self.arch,
+            "mapper": self.mapper,
+            "seed": self.seed,
+            "ii": self.ii,
+            "cycles": self.cycles,
+            "makespan": self.makespan,
+            "segments": len(self.mappings),
+            "verified": self.verified,
+            "timings": {k: round(v, 3) for k, v in self.timings.items()},
+        }
+        if self.motifs:
+            out["motifs"] = self.motifs
+        if self.spatial:
+            out["spatial"] = self.spatial
+        return out
+
+
+def new_provenance() -> Dict[str, object]:
+    return {
+        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "repro_version": REPRO_VERSION,
+    }

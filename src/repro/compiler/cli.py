@@ -1,0 +1,338 @@
+"""``python -m repro.compiler`` / ``plaid-compile`` — toolchain CLI.
+
+Subcommands:
+
+* ``list``     — registered mappers, architectures, and the evaluation grid.
+* ``compile``  — run the pipeline on one workload; write artifact JSON.
+  ``--job`` picks a (arch, mapper) pair from the grid by name;
+  ``--all-jobs`` sweeps the whole grid into ``--out-dir``.
+* ``inspect``  — summarize an artifact; ``--verify`` re-simulates the stored
+  mapping against the DFG oracle **without re-running place & route**.
+* ``diff``     — compare two artifacts, or artifacts / a collect results
+  cache against a golden II file (``--golden``), exit 1 on regression.
+
+Examples::
+
+    plaid-compile compile atax -u 2 --arch plaid2x2 --mapper hierarchical \
+        --out atax_u2.json
+    plaid-compile compile atax -u 2 --all-jobs --out-dir artifacts/
+    plaid-compile inspect artifacts/atax_u2__plaid.json --verify
+    plaid-compile diff --golden tests/golden_ii_quick.json artifacts/*.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+from repro.compiler.artifact import ARTIFACT_SCHEMA, CompileResult
+from repro.compiler.pipeline import (
+    compile_workload,
+    job_grid,
+    list_archs,
+    list_mappers,
+)
+from repro.compiler.registry import MAPPERS
+
+
+# -- golden II diffing (shared with scripts/diff_ii.py) ----------------------
+
+
+def diff_ii_maps(
+    results: Dict[str, Dict[str, Optional[int]]],
+    golden: Dict[str, Dict[str, Optional[int]]],
+    *,
+    require_all: bool = True,
+) -> int:
+    """Compare ``{workload key: {job: ii}}`` maps; returns the number of
+    regressions (higher II, or unmapped where the golden run mapped) and
+    prints a line per difference.  ``require_all=False`` skips golden
+    workloads absent from ``results`` (partial runs / single artifacts)."""
+    bad = better = same = skipped = 0
+    for key, want_ii in sorted(golden.items()):
+        rec = results.get(key)
+        if rec is None:
+            if require_all:
+                print(f"MISSING {key}: not in results")
+                bad += 1
+            else:
+                skipped += 1
+            continue
+        for job, want in sorted(want_ii.items()):
+            if job not in rec:
+                if require_all:
+                    # a full results cache must cover every golden job — a
+                    # renamed/unregistered mapper is a coverage regression
+                    print(f"MISSING {key}/{job}: not in results")
+                    bad += 1
+                else:
+                    skipped += 1  # partial artifact view: job not exercised
+                continue
+            got = rec[job]
+            if want is None:
+                same += 1  # golden found nothing; anything is no worse
+            elif got is None:
+                print(f"REGRESSION {key}/{job}: golden II {want}, got None")
+                bad += 1
+            elif got > want:
+                print(f"REGRESSION {key}/{job}: II {want} -> {got}")
+                bad += 1
+            elif got < want:
+                print(f"improved {key}/{job}: II {want} -> {got}")
+                better += 1
+            else:
+                same += 1
+    for key, rec in sorted(results.items()):
+        extra = [j for j in rec if key not in golden or j not in golden[key]]
+        for j in extra:
+            print(f"note {key}/{j}: no golden entry (skipped)")
+    print(f"ii-diff: {same} identical, {better} improved, {bad} regressed, "
+          f"{skipped} skipped")
+    return bad
+
+
+def _job_of(artifact: CompileResult) -> str:
+    """Grid job name for an artifact's (arch, mapper) pair; falls back to a
+    ``mapper@arch`` label for off-grid combinations."""
+    rev = {(a, m): job for job, (a, m) in job_grid().items()}
+    return rev.get((artifact.arch, artifact.mapper),
+                   f"{artifact.mapper}@{artifact.arch}")
+
+
+def load_ii_results(path: str) -> Dict[str, Dict[str, Optional[int]]]:
+    """Build a ``{workload key: {job: ii}}`` map from any supported source:
+    a directory of artifacts, a single artifact, or a collect results
+    cache (``experiments/cgra/results.json`` layout)."""
+    if os.path.isdir(path):
+        out: Dict[str, Dict[str, Optional[int]]] = {}
+        for fn in sorted(os.listdir(path)):
+            fp = os.path.join(path, fn)
+            if not fn.endswith(".json"):
+                continue
+            if not _is_artifact(fp):
+                print(f"note {fp}: not a {ARTIFACT_SCHEMA} artifact (skipped)")
+                continue
+            _merge_artifact(out, fp)
+        return out
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") == ARTIFACT_SCHEMA:
+        out = {}
+        _merge_artifact(out, path)
+        return out
+    # collect cache: {key: {"ii": {job: ii}, ...}}; also accept bare
+    # {key: {job: ii}} maps (golden-format files diff against themselves)
+    return {
+        key: dict(rec["ii"]) if "ii" in rec else dict(rec)
+        for key, rec in data.items()
+        if isinstance(rec, dict)
+    }
+
+
+def _merge_artifact(out: Dict[str, Dict[str, Optional[int]]], path: str):
+    art = CompileResult.load(path)
+    out.setdefault(art.key, {})[_job_of(art)] = art.ii
+
+
+# -- subcommands -------------------------------------------------------------
+
+
+def _cmd_list(args) -> int:
+    grid = job_grid()
+    print("mappers:")
+    for name in list_mappers():
+        desc = MAPPERS.meta(name).get("description", "")
+        print(f"  {name:14s} {desc}")
+    print("architectures:")
+    for name in list_archs():
+        print(f"  {name}")
+    print("job grid (job: arch x mapper):")
+    for job, (arch, mapper) in grid.items():
+        print(f"  {job:14s} {arch} x {mapper}")
+    return 0
+
+
+def _compile_one(args, arch: str, mapper: str, job: Optional[str]) -> CompileResult:
+    res = compile_workload(
+        args.workload,
+        arch=arch,
+        mapper=mapper,
+        seed=args.seed,
+        budget=args.budget,
+        unroll=args.unroll,
+        iterations=args.iterations,
+        verify=args.verify,
+    )
+    tag = job or f"{mapper}@{arch}"
+    status = f"II={res.ii}" if res.ii is not None else "UNMAPPED"
+    if res.spatial:
+        status += f" segments={res.spatial['segments']}"
+    if res.verified is not None:
+        status += " verified" if res.verified else " VERIFY-FAILED"
+    print(f"{res.key:16s} {tag:14s} {status} "
+          f"cycles={res.cycles} ({res.timings['total']:.2f}s)")
+    return res
+
+
+def _cmd_compile(args) -> int:
+    grid = job_grid()
+    if args.all_jobs:
+        if args.out:
+            print("--out is per-artifact; use --out-dir with --all-jobs",
+                  file=sys.stderr)
+            return 2
+        out_dir = args.out_dir or "artifacts"
+        rc = 0
+        for job, (arch, mapper) in grid.items():
+            res = _compile_one(args, arch, mapper, job)
+            res.save(os.path.join(out_dir, f"{res.key}__{job}.json"))
+            if res.verified is False:
+                rc = 1
+        return rc
+    if args.job is not None:
+        if args.job not in grid:
+            print(f"unknown job {args.job!r}; grid jobs: "
+                  + ", ".join(grid), file=sys.stderr)
+            return 2
+        arch, mapper = grid[args.job]
+    else:
+        arch, mapper = args.arch, args.mapper
+    res = _compile_one(args, arch, mapper, args.job)
+    if args.out:
+        res.save(args.out)
+    elif args.out_dir:
+        job = args.job or _job_of(res)
+        res.save(os.path.join(args.out_dir, f"{res.key}__{job}.json"))
+    return 1 if res.verified is False else 0
+
+
+def _cmd_inspect(args) -> int:
+    rc = 0
+    for path in args.artifacts:
+        art = CompileResult.load(path)
+        print(json.dumps(art.summary(), indent=1))
+        if args.verify:
+            if not art.mappings:
+                print(f"{path}: no stored mapping to verify")
+                rc = 1
+                continue
+            try:
+                art.simulate(iterations=args.iterations)
+                print(f"{path}: re-simulated {len(art.mappings)} mapping(s) "
+                      "against the DFG oracle OK (no P&R re-run)")
+            except Exception as e:
+                # corrupt artifacts surface as AssertionError from
+                # Mapping.validate()/simulate(), but mangled records can
+                # also raise KeyError/TypeError — all mean 'not verified'
+                print(f"{path}: VERIFY FAILED: {type(e).__name__}: {e}")
+                rc = 1
+    return rc
+
+
+def _cmd_diff(args) -> int:
+    if args.golden:
+        with open(args.golden) as f:
+            golden = json.load(f)
+        results: Dict[str, Dict[str, Optional[int]]] = {}
+        for path in args.paths:
+            for key, jobs in load_ii_results(path).items():
+                results.setdefault(key, {}).update(jobs)
+        if golden and not results:
+            print("no artifacts/results found to diff against the golden "
+                  "file — refusing to pass an empty comparison",
+                  file=sys.stderr)
+            return 1
+        require_all = any(
+            not os.path.isdir(p) and not _is_artifact(p) for p in args.paths
+        )
+        bad = diff_ii_maps(results, golden, require_all=require_all)
+        return 1 if bad else 0
+    if len(args.paths) != 2:
+        print("diff needs exactly two artifacts (or --golden)", file=sys.stderr)
+        return 2
+    a = CompileResult.load(args.paths[0])
+    b = CompileResult.load(args.paths[1])
+    diffs: List[str] = []
+    for fld in ("key", "arch", "mapper", "seed", "ii", "cycles", "makespan"):
+        va, vb = getattr(a, fld), getattr(b, fld)
+        if va != vb:
+            diffs.append(f"{fld}: {va} != {vb}")
+    for i, (ra, rb) in enumerate(zip(a.mappings, b.mappings)):
+        for fld in ("place", "time", "routes"):
+            if ra[fld] != rb[fld]:
+                diffs.append(f"mapping[{i}].{fld} differs")
+    if len(a.mappings) != len(b.mappings):
+        diffs.append(f"segments: {len(a.mappings)} != {len(b.mappings)}")
+    if diffs:
+        for d in diffs:
+            print(d)
+        return 1
+    print("artifacts identical (mapping, II, cycles)")
+    return 0
+
+
+def _is_artifact(path: str) -> bool:
+    try:
+        with open(path) as f:
+            return json.load(f).get("schema") == ARTIFACT_SCHEMA
+    except (OSError, ValueError):
+        return False
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="plaid-compile",
+        description="Unified Plaid CGRA compile pipeline",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("list", help="registered mappers/arches and the job grid")
+
+    c = sub.add_parser("compile", help="compile one workload to an artifact")
+    c.add_argument("workload", help="TABLE2 workload name, e.g. atax")
+    c.add_argument("-u", "--unroll", type=int, default=None)
+    c.add_argument("--arch", default="plaid2x2")
+    c.add_argument("--mapper", default="hierarchical")
+    c.add_argument("--job", default=None,
+                   help="pick (arch, mapper) from the evaluation grid")
+    c.add_argument("--all-jobs", action="store_true",
+                   help="sweep every grid job into --out-dir")
+    c.add_argument("--seed", type=int, default=0)
+    c.add_argument("--budget", type=int, default=None,
+                   help="SA/negotiation step budget (default: mapper default)")
+    c.add_argument("--iterations", type=int, default=None,
+                   help="loop trip count for cycle totals")
+    c.add_argument("--verify", action="store_true",
+                   help="cycle-accurately simulate the mapping after P&R")
+    c.add_argument("--out", default=None, help="artifact output path")
+    c.add_argument("--out-dir", default=None,
+                   help="directory for artifacts (name derived from key/job)")
+
+    i = sub.add_parser("inspect", help="summarize (and optionally re-verify)")
+    i.add_argument("artifacts", nargs="+")
+    i.add_argument("--verify", action="store_true",
+                   help="re-simulate the stored mapping (no P&R re-run)")
+    i.add_argument("--iterations", type=int, default=3)
+
+    d = sub.add_parser("diff", help="artifact vs artifact, or vs --golden")
+    d.add_argument("paths", nargs="+",
+                   help="artifacts, artifact dirs, or a collect results.json")
+    d.add_argument("--golden", default=None, help="golden II JSON file")
+
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return {
+        "list": _cmd_list,
+        "compile": _cmd_compile,
+        "inspect": _cmd_inspect,
+        "diff": _cmd_diff,
+    }[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

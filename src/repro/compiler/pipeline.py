@@ -1,0 +1,238 @@
+"""The unified Track-A pipeline: workload → DFG → place & route → artifact.
+
+:func:`compile` is the single front door to the Plaid toolchain::
+
+    from repro.compiler import compile
+
+    result = compile("atax", unroll=2, arch="plaid2x2", mapper="hierarchical",
+                     seed=0)
+    result.ii, result.cycles, result.timings
+    result.save("atax_u2.json")
+
+Every mapper and architecture is looked up by its registered name
+(:mod:`repro.compiler.registry`); the per-paper evaluation grid
+(:func:`job_grid`) is likewise assembled from registry metadata, so adding
+``@register_mapper("mine", jobs={"mine_on_plaid": "plaid2x2"})`` extends
+``repro.core.collect`` and the CLI with no further edits.
+
+Determinism: with the same (workload, arch, mapper, seed, budget) inputs,
+``compile`` constructs the mapper exactly as the legacy entry points did
+(``cls(make_arch(arch), seed=seed)``), so IIs are bit-identical to the
+golden records in ``tests/golden_ii_quick.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple, Union
+
+# Importing the core modules populates the mapper/arch registries.
+import repro.core.mapper  # noqa: F401
+import repro.core.spatial  # noqa: F401
+from repro.compiler.artifact import (
+    CompileResult,
+    mapping_to_record,
+    new_provenance,
+)
+from repro.compiler.registry import ARCHES, MAPPERS
+from repro.core.arch import make_arch
+from repro.core.dfg import DFG
+from repro.core.workloads import TABLE2, Workload, build_workload
+
+DEFAULT_ITERATIONS = 256  # TABLE2 trip count; used for raw-DFG inputs
+
+
+# -- registry front-ends (registration guaranteed by the imports above) -----
+
+
+def get_arch(name: str):
+    """Registered architecture instance (cached per process)."""
+    return make_arch(name)
+
+
+def get_mapper(name: str):
+    """Registered mapper factory."""
+    return MAPPERS.get(name)
+
+
+def list_mappers():
+    return MAPPERS.names()
+
+
+def list_archs():
+    return ARCHES.names()
+
+
+def job_grid() -> Dict[str, Tuple[str, str]]:
+    """The evaluation grid, derived from mapper registrations:
+    ``{job name: (arch name, mapper name)}``.  This is what drives
+    ``repro.core.collect`` (formerly the hard-coded ``MAPPER_JOBS``)."""
+    grid: Dict[str, Tuple[str, str]] = {}
+    for mname in MAPPERS.names():
+        for job, arch_name in MAPPERS.meta(mname).get("jobs", {}).items():
+            grid[job] = (arch_name, mname)
+    return grid
+
+
+# -- frontend ----------------------------------------------------------------
+
+
+def _resolve_workload(
+    workload_or_dfg: Union[str, Tuple[str, int], Workload, DFG],
+    unroll: Optional[int],
+) -> Tuple[Optional[Workload], DFG]:
+    if isinstance(workload_or_dfg, DFG):
+        return None, workload_or_dfg
+    if isinstance(workload_or_dfg, Workload):
+        return workload_or_dfg, build_workload(workload_or_dfg)
+    if isinstance(workload_or_dfg, tuple):
+        workload_or_dfg, unroll = workload_or_dfg
+    if isinstance(workload_or_dfg, str):
+        cands = [w for w in TABLE2 if w.name == workload_or_dfg]
+        if not cands:
+            names = sorted({w.name for w in TABLE2})
+            raise KeyError(
+                f"unknown workload {workload_or_dfg!r}; TABLE2 workloads: "
+                + ", ".join(names)
+            )
+        if unroll is None:
+            w = min(cands, key=lambda w: w.unroll)  # lowest unroll variant
+        else:
+            match = [w for w in cands if w.unroll == unroll]
+            if not match:
+                raise KeyError(
+                    f"workload {workload_or_dfg!r} has no unroll={unroll}; "
+                    f"available: {sorted(w.unroll for w in cands)}"
+                )
+            w = match[0]
+        return w, build_workload(w)
+    raise TypeError(
+        f"expected workload name / (name, unroll) / Workload / DFG, got "
+        f"{type(workload_or_dfg).__name__}"
+    )
+
+
+def _unit_stats(mapper_obj) -> Optional[Dict[str, int]]:
+    """Motif-cover statistics of the unit decomposition the mapper actually
+    used (cached by ``HierarchicalMapper._units_cached``); ``None`` for
+    mappers without a unit decomposition (SA, spatial)."""
+    cached = getattr(mapper_obj, "_units_cache", None)
+    if not cached:
+        return None
+    units = cached[1]
+    kinds = {"fanout": 0, "fanin": 0, "unicast": 0, "single": 0}
+    for u in units:
+        kinds[u.kind] = kinds.get(u.kind, 0) + 1
+    n_motifs = sum(v for k, v in kinds.items() if k != "single")
+    return {
+        "n_units": len(units),
+        "n_motifs": n_motifs,
+        "covered": 3 * n_motifs,
+        **kinds,
+    }
+
+
+# -- the pipeline ------------------------------------------------------------
+
+
+def compile(
+    workload_or_dfg: Union[str, Tuple[str, int], Workload, DFG],
+    arch: str = "plaid2x2",
+    mapper: str = "hierarchical",
+    seed: int = 0,
+    budget: Optional[int] = None,
+    *,
+    unroll: Optional[int] = None,
+    iterations: Optional[int] = None,
+    verify: bool = False,
+) -> CompileResult:
+    """Run the full pipeline and return a serializable :class:`CompileResult`.
+
+    ``workload_or_dfg``: a TABLE2 workload name (optionally with ``unroll``),
+    a ``(name, unroll)`` tuple, a :class:`Workload`, or a raw :class:`DFG`.
+    ``arch`` / ``mapper``: registered names (:class:`RegistryError` lists the
+    options on a typo).  ``budget`` overrides the mapper's SA/negotiation
+    step budget; ``None`` keeps the registered default — required for
+    golden-II reproducibility.  ``verify=True`` additionally runs the
+    cycle-accurate simulator against the DFG oracle and records the outcome.
+    """
+    t0 = time.perf_counter()
+    mapper_name = MAPPERS.resolve(mapper)
+    factory = MAPPERS.get(mapper_name)
+    meta = MAPPERS.meta(mapper_name)
+    # the artifact must record the REGISTERED name (what load()/simulate()
+    # feed back to make_arch), not Arch.name, which a plug-in arch may set
+    # to anything
+    arch_name = ARCHES.resolve(arch)
+    arch_obj = make_arch(arch_name)
+
+    w, dfg = _resolve_workload(workload_or_dfg, unroll)
+    if iterations is None:
+        iterations = w.iterations if w is not None else DEFAULT_ITERATIONS
+    workload_info: Dict[str, object] = (
+        {
+            "name": w.name,
+            "unroll": w.unroll,
+            "iterations": iterations,
+            "domain": w.domain,
+        }
+        if w is not None
+        else {"dfg_name": dfg.name, "iterations": iterations}
+    )
+    t_frontend = time.perf_counter()
+
+    if budget is None:
+        mapper_obj = factory(arch_obj, seed=seed)
+    else:
+        mapper_obj = factory(arch_obj, seed=seed, time_budget=budget)
+    result = mapper_obj.map(dfg)
+    t_pnr = time.perf_counter()
+
+    out = CompileResult(
+        arch=arch_name,
+        mapper=mapper_name,
+        seed=seed,
+        budget=budget,
+        workload=workload_info,
+        motifs=_unit_stats(mapper_obj),
+        provenance=new_provenance(),
+    )
+
+    if meta.get("result") == "spatial":
+        sp = result
+        out.ii = 1 if sp.segments else None  # spatial = frozen II=1 configs
+        out.cycles = sp.cycles(iterations)
+        out.makespan = max((m.makespan for m in sp.segments), default=None)
+        out.mappings = [mapping_to_record(m) for m in sp.segments]
+        out.spatial = {
+            "segments": sp.n_segments,
+            "extra_mem_ops": sp.extra_mem_ops,
+            "analytic": bool(sp.analytic_segments),
+        }
+    elif result is not None:
+        out.ii = result.ii
+        out.cycles = result.cycles(iterations)
+        out.makespan = result.makespan
+        out.mappings = [mapping_to_record(result)]
+
+    t_verify = t_pnr
+    if verify:
+        if out.mappings:
+            try:
+                out.simulate(iterations=3)
+                out.verified = True
+            except AssertionError:
+                out.verified = False
+        else:
+            out.verified = False  # verification requested, nothing mapped
+        t_verify = time.perf_counter()
+
+    out.timings = {
+        "frontend": t_frontend - t0,
+        "pnr": t_pnr - t_frontend,
+        "verify": t_verify - t_pnr,
+        "total": time.perf_counter() - t0,
+    }
+    return out
+
+
+compile_workload = compile  # alias that does not shadow builtins at call sites

@@ -1,0 +1,116 @@
+"""Name registries for the compile() pipeline.
+
+Two global registries — mappers and architectures — let new components plug
+into the toolchain without editing pipeline internals:
+
+    @register_mapper("hierarchical", jobs={"plaid": "plaid2x2"})
+    class HierarchicalMapper: ...
+
+    @register_arch("plaid2x2", aliases=("plaid",))
+    def _build(): return build_plaid(2, 2, "plaid2x2")
+
+Mapper entries are factories ``factory(arch, seed=..., time_budget=...)``
+returning an object with ``.map(dfg)``; arch entries are zero-argument
+builders returning an :class:`~repro.core.arch.Arch`.  Arbitrary keyword
+metadata rides along with each registration (``jobs`` drives the collect
+grid, see :func:`repro.compiler.pipeline.job_grid`).
+
+This module is dependency-free on purpose: ``repro.core.arch`` registers its
+builders here at import time, and the pipeline imports the core modules — a
+cycle unless the registry itself stays leaf-level.
+
+Unknown names raise :class:`RegistryError` (a ``ValueError``/``KeyError``
+hybrid via ``LookupError`` semantics is avoided — ``ValueError`` keeps the
+pre-registry ``make_arch`` contract) whose message lists every registered
+option.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Optional
+
+
+class RegistryError(ValueError):
+    """Lookup of a name that was never registered."""
+
+
+class Registry:
+    """An ordered name -> object registry with aliases and metadata."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: Dict[str, object] = {}
+        self._meta: Dict[str, Dict[str, object]] = {}
+        self._aliases: Dict[str, str] = {}
+
+    # -- registration ------------------------------------------------------
+    def register(
+        self,
+        name: str,
+        obj: Optional[object] = None,
+        *,
+        aliases: Iterable[str] = (),
+        **meta: object,
+    ):
+        """Register ``obj`` under ``name``; usable as a decorator when
+        ``obj`` is omitted.  Re-registering a name replaces it (latest wins,
+        so tests can shadow built-ins)."""
+
+        def _do(target):
+            self._items[name] = target
+            self._meta[name] = dict(meta)
+            for a in aliases:
+                self._aliases[a] = name
+            return target
+
+        if obj is None:
+            return _do
+        return _do(obj)
+
+    # -- lookup ------------------------------------------------------------
+    def resolve(self, name: str) -> str:
+        """Canonical name for ``name`` (follows aliases); raises
+        :class:`RegistryError` listing the registered options."""
+        if name in self._items:
+            return name
+        if name in self._aliases:
+            return self._aliases[name]
+        raise RegistryError(
+            f"unknown {self.kind} {name!r}; registered {self.kind}s: "
+            + ", ".join(self.names())
+        )
+
+    def get(self, name: str) -> object:
+        return self._items[self.resolve(name)]
+
+    def meta(self, name: str) -> Dict[str, object]:
+        return self._meta[self.resolve(name)]
+
+    def names(self) -> List[str]:
+        return list(self._items)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items or name in self._aliases
+
+
+MAPPERS = Registry("mapper")
+ARCHES = Registry("arch")
+
+
+def register_mapper(name: str, **kw) -> Callable:
+    """Decorator: register a mapper factory (``cls(arch, seed=, time_budget=)``
+    with a ``.map(dfg)`` method) under ``name``.  Keyword metadata: ``jobs``
+    maps collect-grid job names to arch names; ``result="spatial"`` marks
+    factories whose ``.map`` returns a
+    :class:`~repro.core.spatial.SpatialResult` instead of a
+    :class:`~repro.core.mapper.Mapping`."""
+    return MAPPERS.register(name, **kw)
+
+
+def register_arch(name: str, **kw) -> Callable:
+    """Decorator: register a zero-argument architecture builder."""
+    return ARCHES.register(name, **kw)
+
+
+# Lookup helpers (get_mapper/list_mappers/...) live in
+# repro.compiler.pipeline, whose imports guarantee the built-ins are
+# registered before the first query; this module stays registration-only.

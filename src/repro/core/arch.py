@@ -24,6 +24,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.compiler.registry import register_arch
 from repro.core.dfg import COMPUTE_OPS, MEMORY_OPS
 
 ALL_EXEC_OPS = COMPUTE_OPS | MEMORY_OPS
@@ -262,34 +263,64 @@ def build_plaid(rows: int = 2, cols: int = 2, name: str = "plaid2x2",
     return a
 
 
-_ARCH_CACHE: Dict[str, Arch] = {}
+_ARCH_CACHE: Dict[str, Tuple[object, Arch]] = {}  # canon -> (builder, arch)
 
 
 def make_arch(name: str) -> Arch:
     """Build (or return the cached) architecture for ``name``.
 
-    Arch objects are immutable after construction, and the routing engine's
-    distance tables hang off the instance — caching means every mapper and
-    test in a process shares one fabric and one set of tables per name.
+    Names (and aliases) come from the ``@register_arch`` registry — new
+    fabrics plug in by registering a builder, no edits here.  Arch objects
+    are immutable after construction, and the routing engine's distance
+    tables hang off the instance — caching means every mapper and test in a
+    process shares one fabric and one set of tables per canonical name.
     """
-    a = _ARCH_CACHE.get(name)
-    if a is None:
-        a = _ARCH_CACHE[name] = _build_arch(name)
-    return a
+    from repro.compiler.registry import ARCHES
+
+    canon = ARCHES.resolve(name)  # RegistryError (a ValueError) if unknown
+    builder = ARCHES.get(canon)
+    cached = _ARCH_CACHE.get(canon)
+    if cached is None or cached[0] is not builder:
+        # cache keyed by the registered builder so re-registering a name
+        # (latest wins) takes effect even after a prior make_arch call
+        cached = _ARCH_CACHE[canon] = (builder, builder())
+    return cached[1]
 
 
-def _build_arch(name: str) -> Arch:
-    if name in ("st", "st4x4", "spatio_temporal"):
-        return build_spatio_temporal(4, 4, "st4x4")
-    if name in ("st6x6",):
-        return build_spatio_temporal(6, 6, "st6x6")
-    if name in ("spatial", "spatial4x4"):
-        return build_spatial(4, 4, "spatial4x4")
-    if name in ("plaid", "plaid2x2"):
-        return build_plaid(2, 2, "plaid2x2")
-    if name in ("plaid3x3",):
-        return build_plaid(3, 3, "plaid3x3")
-    if name == "plaid_ml":  # §4.4: 2 fan-in + 1 unicast + 1 fan-out hardwired
-        return build_plaid(2, 2, "plaid_ml",
-                           hardwired={0: "fanin", 1: "fanin", 2: "unicast", 3: "fanout"})
-    raise ValueError(name)
+# -- registered fabrics (§6 evaluation set) ---------------------------------
+
+
+@register_arch("st4x4", aliases=("st", "spatio_temporal"),
+               description="4x4 spatio-temporal baseline (Fig. 3)")
+def _arch_st4x4() -> Arch:
+    return build_spatio_temporal(4, 4, "st4x4")
+
+
+@register_arch("st6x6", description="6x6 spatio-temporal scale-up")
+def _arch_st6x6() -> Arch:
+    return build_spatio_temporal(6, 6, "st6x6")
+
+
+@register_arch("spatial4x4", aliases=("spatial",),
+               description="4x4 spatial CGRA (frozen config per segment)")
+def _arch_spatial4x4() -> Arch:
+    return build_spatial(4, 4, "spatial4x4")
+
+
+@register_arch("plaid2x2", aliases=("plaid",),
+               description="Plaid 2x2 PCU array (Fig. 9)")
+def _arch_plaid2x2() -> Arch:
+    return build_plaid(2, 2, "plaid2x2")
+
+
+@register_arch("plaid3x3", description="Plaid 3x3 PCU array (Fig. 17)")
+def _arch_plaid3x3() -> Arch:
+    return build_plaid(3, 3, "plaid3x3")
+
+
+@register_arch("plaid_ml",
+               description="ML-specialized Plaid 2x2: hardwired motifs (§4.4)")
+def _arch_plaid_ml() -> Arch:
+    # §4.4: 2 fan-in + 1 unicast + 1 fan-out hardwired
+    return build_plaid(2, 2, "plaid_ml",
+                       hardwired={0: "fanin", 1: "fanin", 2: "unicast", 3: "fanout"})

@@ -25,73 +25,96 @@ import time
 from multiprocessing import Pool
 from typing import Dict, Tuple
 
-from repro.core.arch import make_arch
-from repro.core.mapper import (
-    HierarchicalMapper,
-    NodeGreedyMapper,
-    PathFinderMapper2,
-)
+from repro.compiler.pipeline import compile_workload, job_grid
+from repro.compiler.registry import MAPPERS
 from repro.core.motifs import generate_motifs, motif_cover_stats, validate_cover
-from repro.core.simulate import simulate
-from repro.core.spatial import map_spatial
-from repro.core.workloads import TABLE2, build_workload, workload_by_name
+from repro.core.workloads import (
+    TABLE2,
+    build_workload,
+    quick_workloads,
+    workload_by_name,
+)
 
 BENCH_PATH = "BENCH_mapper.json"
 
-# job name -> (arch name, mapper class); "motifs" and "spatial" are special
-MAPPER_JOBS = {
-    "plaid": ("plaid2x2", HierarchicalMapper),
-    "plaid3x3": ("plaid3x3", HierarchicalMapper),
-    "st": ("st4x4", NodeGreedyMapper),
-    "pf_on_plaid": ("plaid2x2", PathFinderMapper2),
-    "node_on_plaid": ("plaid2x2", NodeGreedyMapper),
-    "plaid_ml": ("plaid_ml", HierarchicalMapper),
-}
-JOB_NAMES = ["motifs", "spatial"] + list(MAPPER_JOBS)
+# The evaluation grid is derived from the mapper registry (``jobs`` metadata
+# on each ``@register_mapper``), not hard-coded: registering a new mapper or
+# arch variant extends the collect sweep automatically — ``collect()`` and
+# ``run_job`` re-derive the grid at call time, so registrations made after
+# this module is imported are still swept.  Caveat: pool workers see runtime
+# registrations via the fork start method (Linux default); under spawn,
+# register in an imported module so workers re-create the registration.
+# "spatial" keeps its dedicated results slot; "motifs" is an analysis pass,
+# not a mapper job.
+
+
+def _spatial_jobs() -> Dict[str, Tuple[str, str]]:
+    """Grid jobs whose mapper is marked ``result="spatial"`` in the registry
+    (classified by metadata, not by job-name string)."""
+    return {
+        job: pair for job, pair in job_grid().items()
+        if MAPPERS.meta(pair[1]).get("result") == "spatial"
+    }
+
+
+def mapper_jobs() -> Dict[str, Tuple[str, str]]:
+    sp = _spatial_jobs()
+    return {job: pair for job, pair in job_grid().items() if job not in sp}
+
+
+def job_names():
+    sp = list(_spatial_jobs())
+    # the results.json schema has exactly one dedicated "spatial" slot
+    # (paper Figs. 12/15); fail loudly rather than misfile a second
+    # spatial-style mapper's cells under the modulo-mapper columns
+    assert sp == ["spatial"], (
+        f"results schema supports exactly one spatial job named 'spatial'; "
+        f"registered spatial-style jobs: {sp}"
+    )
+    return ["motifs", "spatial"] + list(mapper_jobs())
+
+
+# import-time snapshots, for introspection and back-compat only
+MAPPER_JOBS: Dict[str, Tuple[str, str]] = mapper_jobs()
+JOB_NAMES = job_names()
+
+VERIFY_JOBS = ("plaid", "st")  # functional verification of headline mappings
 
 
 def run_job(task: Tuple[str, int, str]):
-    """One grid cell: map one workload with one mapper/arch (or run the
-    motif / spatial analyses).  Returns a small picklable payload."""
+    """One grid cell: compile one workload with one registered mapper/arch
+    pair (or run the motif analysis).  Returns a small picklable payload."""
     wname, unroll, job = task
     w = workload_by_name(wname, unroll)
-    g = build_workload(w)
     t0 = time.time()
     out: Dict[str, object] = {}
     if job == "motifs":
+        g = build_workload(w)
         motifs, standalone = generate_motifs(g, seed=1)
         validate_cover(g, motifs, standalone)
         out["motifs"] = motif_cover_stats(g, motifs)
         strict, _ = generate_motifs(g, seed=1, feasibility="strict")
         out["motifs_strict_covered"] = motif_cover_stats(g, strict)["covered"]
-    elif job == "spatial":
-        sp = map_spatial(g, make_arch("spatial4x4"))
-        out["spatial"] = {
-            "segments": sp.n_segments,
-            "extra_mem_ops": sp.extra_mem_ops,
-            "analytic": bool(sp.analytic_segments),
-        }
-        out["cycles"] = sp.cycles(w.iterations)
+    elif job in _spatial_jobs():
+        arch_name, mapper_name = job_grid()[job]
+        res = compile_workload(w, arch=arch_name, mapper=mapper_name, seed=0)
+        out["spatial"] = res.spatial
+        out["cycles"] = res.cycles
     else:
-        arch_name, cls = MAPPER_JOBS[job]
-        m = cls(make_arch(arch_name), seed=0).map(g)
-        out["ii"] = m.ii if m else None
-        out["cycles"] = m.cycles(w.iterations) if m else None
-        if job in ("plaid", "st"):
-            # functional verification of the two headline mappings
-            verified = False
-            if m is not None:
-                try:
-                    simulate(m, iterations=3)
-                    verified = True
-                except AssertionError:
-                    verified = False
-            out["verified"] = verified
+        arch_name, mapper_name = mapper_jobs()[job]
+        res = compile_workload(
+            w, arch=arch_name, mapper=mapper_name, seed=0,
+            verify=job in VERIFY_JOBS,
+        )
+        out["ii"] = res.ii
+        out["cycles"] = res.cycles
+        if job in VERIFY_JOBS:
+            out["verified"] = bool(res.verified)
     out["wall_s"] = time.time() - t0
     return f"{w.name}_u{w.unroll}", job, out
 
 
-def _finalize(w, parts: Dict[str, Dict]) -> Dict:
+def _finalize(w, parts: Dict[str, Dict], grid_jobs) -> Dict:
     rec = {
         "domain": w.domain,
         "iterations": w.iterations,
@@ -100,10 +123,10 @@ def _finalize(w, parts: Dict[str, Dict]) -> Dict:
         "covered_paper": w.covered_paper,
         "motifs": parts["motifs"]["motifs"],
         "motifs_strict_covered": parts["motifs"]["motifs_strict_covered"],
-        "ii": {j: parts[j]["ii"] for j in MAPPER_JOBS},
-        "cycles": {j: parts[j]["cycles"] for j in MAPPER_JOBS},
+        "ii": {j: parts[j]["ii"] for j in grid_jobs},
+        "cycles": {j: parts[j]["cycles"] for j in grid_jobs},
         "spatial": parts["spatial"]["spatial"],
-        "verified": {j: parts[j]["verified"] for j in ("plaid", "st")},
+        "verified": {j: parts[j]["verified"] for j in VERIFY_JOBS},
         "wall_s": round(sum(p["wall_s"] for p in parts.values()), 1),
     }
     rec["cycles"]["spatial"] = parts["spatial"]["cycles"]
@@ -126,9 +149,11 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
     if os.path.exists(out_path):  # resume
         with open(out_path) as f:
             results = json.load(f)
-    table = TABLE2[:6] if quick else TABLE2
+    table = quick_workloads() if quick else TABLE2
+    grid_jobs = mapper_jobs()  # call-time: sweeps late registrations too
+    names = job_names()
     pending = [w for w in table if f"{w.name}_u{w.unroll}" not in results]
-    tasks = [(w.name, w.unroll, j) for w in pending for j in JOB_NAMES]
+    tasks = [(w.name, w.unroll, j) for w in pending for j in names]
     by_key = {f"{w.name}_u{w.unroll}": w for w in pending}
     n_jobs = max(1, jobs or os.cpu_count() or 1)
     t_start = time.time()
@@ -138,9 +163,9 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
         for key, job, out in stream:
             parts = partial.setdefault(key, {})
             parts[job] = out
-            if len(parts) < len(JOB_NAMES):
+            if len(parts) < len(names):
                 continue
-            rec = _finalize(by_key[key], partial.pop(key))
+            rec = _finalize(by_key[key], partial.pop(key), grid_jobs)
             results[key] = rec
             print(
                 f"{key:14s} plaid={rec['ii']['plaid']} st={rec['ii']['st']} "

@@ -65,6 +65,27 @@ class DFG:
         assert src in self.nodes and dst in self.nodes
         self.edges.append(Edge(src, dst, distance, operand))
 
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> Dict[str, object]:
+        """JSON-safe structural dump; exact inverse of :meth:`from_json`
+        (node ids, edge order, and operand slots are all preserved, so a
+        mapping's edge indices stay valid across a round-trip)."""
+        return {
+            "name": self.name,
+            "nodes": [[n.id, n.op, n.name] for n in self.nodes.values()],
+            "edges": [[e.src, e.dst, e.distance, e.operand] for e in self.edges],
+        }
+
+    @classmethod
+    def from_json(cls, data: Dict[str, object]) -> "DFG":
+        g = cls(data["name"])
+        for nid, op, name in data["nodes"]:
+            g.nodes[int(nid)] = Node(int(nid), op, name)
+        g._next = 1 + max((n for n in g.nodes), default=-1)
+        for src, dst, distance, operand in data["edges"]:
+            g.connect(int(src), int(dst), int(distance), int(operand))
+        return g
+
     # -- views ------------------------------------------------------------
     @property
     def n_nodes(self) -> int:

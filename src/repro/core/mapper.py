@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.compiler.registry import register_mapper
 from repro.core.arch import Arch, FU
 from repro.core.dfg import DFG, Edge
 from repro.core.motifs import Motif
@@ -563,6 +564,7 @@ class _BaseMapper:
 # ---------------------------------------------------------------------------
 
 
+@register_mapper("sa", description="node-level simulated annealing baseline")
 class SAMapper(_BaseMapper):
     """Plain simulated annealing over single-node moves [3, 68, 73]."""
 
@@ -811,6 +813,11 @@ class Unit:
     nodes: Tuple[int, ...]
 
 
+@register_mapper(
+    "hierarchical",
+    jobs={"plaid": "plaid2x2", "plaid3x3": "plaid3x3", "plaid_ml": "plaid_ml"},
+    description="Algorithm 2: motif-level hierarchical place & route",
+)
 class HierarchicalMapper(SAMapper):
     """Algorithm 2: sort motifs by data dependency; map each motif to the
     unit with the least routing cost; SA over whole-motif moves with
@@ -1218,6 +1225,11 @@ class HierarchicalMapper(SAMapper):
 # ---------------------------------------------------------------------------
 
 
+@register_mapper(
+    "node_greedy",
+    jobs={"st": "st4x4", "node_on_plaid": "plaid2x2"},
+    description="node-level multi-start greedy (the Fig. 18 generic mapper)",
+)
 class NodeGreedyMapper(HierarchicalMapper):
     """Node-level baseline: same stochastic multi-start construction but
     every unit is a single node (no motif knowledge). This is the
@@ -1234,6 +1246,11 @@ class NodeGreedyMapper(HierarchicalMapper):
         return units
 
 
+@register_mapper(
+    "pathfinder",
+    jobs={"pf_on_plaid": "plaid2x2"},
+    description="negotiated-congestion baseline (PathFinder rip-up/re-route)",
+)
 class PathFinderMapper2(NodeGreedyMapper):
     """Negotiated-congestion baseline: construct with overuse allowed,
     then iteratively rip-up & re-route with growing history costs [38]."""

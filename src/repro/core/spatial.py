@@ -12,6 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+from repro.compiler.registry import register_mapper
 from repro.core.arch import Arch, make_arch
 from repro.core.dfg import DFG
 from repro.core.mapper import Mapping, NodeGreedyMapper
@@ -203,6 +204,28 @@ def _segment_dfg(dfg: DFG, nodes: List[int], tag: int) -> Tuple[DFG, int]:
             stored.add(e.src)
             extra += 1
     return sub, extra
+
+
+@register_mapper(
+    "spatial",
+    jobs={"spatial": "spatial4x4"},
+    result="spatial",
+    description="spatial-CGRA partition + II=1 P&R (segments, SPM cut pairs)",
+)
+class SpatialPipelineMapper:
+    """Registry adapter: gives :func:`map_spatial` the ``cls(arch, seed=,
+    time_budget=).map(dfg)`` shape every other registered mapper has, so
+    the spatial model is just another mapper to :func:`repro.compiler.compile`.
+    ``time_budget`` is accepted for interface parity; the partitioner's
+    budgets are structural (segment caps), not step counts."""
+
+    def __init__(self, arch: Arch, seed: int = 0,
+                 time_budget: Optional[int] = None):
+        self.arch = arch
+        self.seed = seed
+
+    def map(self, dfg: DFG) -> SpatialResult:
+        return map_spatial(dfg, self.arch, seed=self.seed)
 
 
 def map_spatial(dfg: DFG, arch: Optional[Arch] = None, seed: int = 0) -> SpatialResult:

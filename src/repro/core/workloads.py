@@ -62,6 +62,15 @@ TABLE2: List[Workload] = [
 ]
 
 
+QUICK_N = 10  # --quick prefix of TABLE2; golden IIs in tests/golden_ii_quick.json
+
+
+def quick_workloads() -> List[Workload]:
+    """The quick evaluation subset (``collect --quick``, CI, and the
+    routing-equivalence golden file all agree on this slice)."""
+    return TABLE2[:QUICK_N]
+
+
 def _alloc_noncompute(nc: int) -> Tuple[int, int, int]:
     """nc -> (consts, loads, stores)."""
     stores = 1 if nc < 12 else 2

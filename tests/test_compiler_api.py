@@ -1,0 +1,192 @@
+"""The unified compile() pipeline: registries, artifacts, CLI.
+
+Covers the contract the serving/caching layers depend on:
+
+* ``CompileResult.save()/load()`` round-trips bit-identically, and a loaded
+  artifact re-simulates to exactly the same per-(node, iteration) values as
+  the live mapping — without re-running place & route;
+* registry error paths name every registered option;
+* the collect job grid is derived from the registry, not hard-coded;
+* the ``plaid-compile`` CLI compiles / inspects / diffs artifacts.
+"""
+import json
+import os
+
+import pytest
+
+from repro.compiler import CompileResult, RegistryError, compile, job_grid
+from repro.compiler.pipeline import get_mapper, list_archs, list_mappers
+from repro.core.arch import make_arch
+from repro.core.dfg import DFG
+from repro.core.mapper import HierarchicalMapper
+from repro.core.simulate import simulate
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_ii_quick.json")
+
+
+# -- artifact round-trip -----------------------------------------------------
+
+
+def test_compile_result_roundtrip_bit_identical(tmp_path, workload_dfg):
+    res = compile("atax", unroll=2, arch="plaid2x2", mapper="hierarchical",
+                  seed=0)
+    assert res.ii is not None and res.mappings
+    path = res.save(str(tmp_path / "atax_u2.json"))
+    loaded = CompileResult.load(path)
+    # the JSON views agree exactly (ints stay ints, keys restored)
+    assert loaded.to_json() == res.to_json()
+    # the loaded artifact simulates to EXACTLY the live mapping's values
+    live = HierarchicalMapper(make_arch("plaid2x2"), seed=0).map(
+        workload_dfg("atax", 2)
+    )
+    want = simulate(live, iterations=3)
+    got = loaded.simulate(iterations=3)
+    assert len(got) == 1
+    assert got[0] == want  # bit-identical floats, no re-P&R
+
+    # saved -> loaded -> saved again is byte-stable
+    path2 = loaded.save(str(tmp_path / "again.json"))
+    with open(path) as a, open(path2) as b:
+        assert json.load(a) == json.load(b)
+
+
+def test_loaded_artifact_rejects_corruption(tmp_path):
+    res = compile("atax", unroll=2)
+    path = res.save(str(tmp_path / "a.json"))
+    with open(path) as f:
+        data = json.load(f)
+    # shift one node's issue slot: validate()/simulate() must catch it
+    rec = data["mappings"][0]
+    node = next(iter(rec["time"]))
+    rec["time"][node] = rec["time"][node] + 1
+    with open(path, "w") as f:
+        json.dump(data, f)
+    with pytest.raises(AssertionError):
+        CompileResult.load(path).simulate(iterations=3)
+
+
+def test_spatial_is_just_another_mapper(tmp_path):
+    res = compile("dwconv", unroll=1, arch="spatial4x4", mapper="spatial")
+    assert res.spatial is not None
+    assert res.spatial["segments"] >= 1
+    if res.mappings:  # routed (non-analytic) spatial mappings round-trip too
+        loaded = CompileResult.load(res.save(str(tmp_path / "sp.json")))
+        vals = loaded.simulate(iterations=3)
+        assert len(vals) == len(res.mappings)
+
+
+def test_compile_accepts_raw_dfg():
+    g = DFG("tiny")
+    c = g.add("const")
+    a = g.add("add", "a", [c, c])
+    g.add("store", "st", [a])
+    res = compile(g, arch="plaid2x2", mapper="node_greedy", seed=0)
+    assert res.ii is not None
+    assert res.workload["dfg_name"] == "tiny"
+    assert res.key == "tiny"
+
+
+def test_dfg_json_roundtrip_preserves_edge_indices(workload_dfg):
+    g = workload_dfg("bicg", 2)
+    g2 = DFG.from_json(g.to_json())
+    assert [(e.src, e.dst, e.distance, e.operand) for e in g.edges] == \
+        [(e.src, e.dst, e.distance, e.operand) for e in g2.edges]
+    assert {n: (v.op, v.name) for n, v in g.nodes.items()} == \
+        {n: (v.op, v.name) for n, v in g2.nodes.items()}
+    assert g2._next == g._next
+
+
+# -- registries --------------------------------------------------------------
+
+
+def test_unknown_mapper_lists_registered_options():
+    with pytest.raises(RegistryError) as ei:
+        compile("atax", unroll=2, mapper="does_not_exist")
+    msg = str(ei.value)
+    for name in list_mappers():
+        assert name in msg
+
+
+def test_unknown_arch_lists_registered_options():
+    with pytest.raises(ValueError) as ei:  # RegistryError is a ValueError
+        make_arch("does_not_exist")
+    msg = str(ei.value)
+    for name in list_archs():
+        assert name in msg
+
+
+def test_arch_aliases_share_the_cached_instance():
+    assert make_arch("plaid") is make_arch("plaid2x2")
+    assert make_arch("st") is make_arch("st4x4")
+    assert make_arch("spatial") is make_arch("spatial4x4")
+
+
+def test_unknown_workload_lists_table2():
+    with pytest.raises(KeyError) as ei:
+        compile("not_a_kernel")
+    assert "atax" in str(ei.value)
+
+
+def test_budget_override_reaches_the_mapper():
+    m = get_mapper("hierarchical")(make_arch("plaid2x2"), seed=0,
+                                   time_budget=123)
+    assert m.time_budget <= 123  # REPRO_QUICK may clamp further down
+
+
+# -- registry-derived collect grid ------------------------------------------
+
+
+def test_job_grid_derived_from_registry_covers_golden():
+    grid = job_grid()
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    golden_jobs = {j for rec in golden.values() for j in rec}
+    assert golden_jobs <= set(grid), (
+        f"golden jobs {golden_jobs - set(grid)} missing from registry grid"
+    )
+    for job, (arch_name, mapper_name) in grid.items():
+        assert mapper_name in list_mappers()
+        make_arch(arch_name)  # resolvable
+
+
+def test_collect_mapper_jobs_match_registry():
+    from repro.core.collect import JOB_NAMES, MAPPER_JOBS
+
+    grid = job_grid()
+    assert MAPPER_JOBS == {j: p for j, p in grid.items() if j != "spatial"}
+    assert set(JOB_NAMES) == {"motifs", "spatial"} | set(MAPPER_JOBS)
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+def test_cli_compile_inspect_diff(tmp_path, monkeypatch):
+    # golden IIs were measured at full search budget; drop the suite's
+    # --quick clamp so the CLI's mapping is apples-to-apples with golden
+    monkeypatch.delenv("REPRO_QUICK", raising=False)
+    from repro.compiler.cli import main
+
+    art = str(tmp_path / "atax_u2__plaid.json")
+    assert main(["compile", "atax", "-u", "2", "--job", "plaid",
+                 "--out", art, "--verify"]) == 0
+    assert main(["inspect", art, "--verify"]) == 0
+    assert main(["diff", art, art]) == 0
+    assert main(["diff", "--golden", GOLDEN, art]) == 0
+    assert main(["list"]) == 0
+
+    loaded = CompileResult.load(art)
+    assert loaded.verified is True
+    assert loaded.mapper == "hierarchical" and loaded.arch == "plaid2x2"
+
+
+def test_cli_diff_flags_regression(tmp_path):
+    from repro.compiler.cli import main
+
+    res = compile("atax", unroll=2)
+    good = str(tmp_path / "good.json")
+    res.save(good)
+    res.ii = (res.ii or 0) + 1
+    res.cycles = (res.cycles or 0) + 1
+    bad = str(tmp_path / "bad.json")
+    res.save(bad)
+    assert main(["diff", good, bad]) == 1

@@ -4,11 +4,13 @@ The fast routing engine (distance-table A* pruning + flat-array MRRG) is
 designed to be *bit-identical* to the original blind Dijkstra/DP — same
 paths, same costs, same tie-breaks — so every mapper must reproduce the
 seed baseline's II at fixed seeds.  ``tests/golden_ii_quick.json`` holds
-the IIs the seed code produced for the ``TABLE2[:6]`` quick set (measured
-once, before the rewrite); this test re-maps the two headline mappers live
-and fails if any II regresses.  Equal is expected; lower would also pass
-(quality improved).  The full 6-mapper grid is diffed against the same
-golden file by ``scripts/ci.sh`` after ``collect --quick``.
+the IIs for the ``quick_workloads()`` slice of TABLE2 (the first 6 measured
+on the seed code before the engine rewrite; the extension beyond that
+measured on the verified-equivalent engine); this test re-maps the two
+headline mappers live and fails if any II regresses.  Equal is expected;
+lower would also pass (quality improved).  The full mapper grid is diffed
+against the same golden file by ``scripts/ci.sh`` after ``collect --quick``,
+via the ``repro.compiler`` artifact/diff path.
 """
 import json
 import os
@@ -17,15 +19,14 @@ import pytest
 
 from repro.core.arch import make_arch
 from repro.core.mapper import HierarchicalMapper, NodeGreedyMapper
-from repro.core.workloads import build_workload, workload_by_name
+from repro.core.workloads import quick_workloads
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden_ii_quick.json")
 
 with open(GOLDEN) as _f:
     _GOLDEN_II = json.load(_f)
 
-QUICK_SET = [("atax", 2), ("atax", 4), ("bicg", 2), ("bicg", 4),
-             ("doitgen", 2), ("doitgen", 4)]
+QUICK_SET = [(w.name, w.unroll) for w in quick_workloads()]
 
 
 def _check(key: str, mapper_key: str, mapping):
