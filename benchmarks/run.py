@@ -242,12 +242,14 @@ def bench_mapper_speed():
     if ref:
         x = (ref / ref_n) / (latest["wall_s"] / run_n)
         speedup = f" {x:.1f}x/workload vs seed {ref}s/{ref_n}"
+    cache = latest.get("route_cache_hit_rate")
+    cache_s = f" route_cache={cache:.1%}" if cache is not None else ""
     # numeric metric is per-workload for the same reason: keeps the trend
     # column comparable across quick-set size changes
     emit(
         "bench_mapper_speed", latest["wall_s"] / run_n * 1e6,
         f"collect --quick wall={latest['wall_s']}s jobs={latest['jobs']} "
-        f"workloads={run_n}{speedup} (target >=5x)",
+        f"workloads={run_n}{speedup}{cache_s} (target >=5x)",
     )
 
 

@@ -10,6 +10,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 BUDGET="${CI_BUDGET_S:-900}"
 
+echo "== dev extras (hypothesis: fully randomized property tests) =="
+# Best effort: offline/air-gapped runners fall back to the deterministic
+# shim in tests/_hypothesis_shim.py, which is exactly its purpose.
+python -m pip install -q -e ".[dev]" 2>/dev/null \
+    || echo "pip install .[dev] unavailable (offline?) — property tests use the shim"
+
 echo "== tier-1 tests (budget ${BUDGET}s) =="
 if [ "${CI_FULL_TESTS:-0}" = "1" ]; then
     timeout "$BUDGET" python -m pytest -x -q
@@ -31,10 +37,14 @@ python -m repro.compiler inspect --verify \
 echo "== collect --quick (budget ${BUDGET}s) =="
 OUT=$(mktemp /tmp/ci_results.XXXXXX.json)
 rm -f "$OUT"   # collect resumes from existing files; start fresh
+# perf-smoke entry lands in the repo trajectory so runs are comparable
 timeout "$BUDGET" python -m repro.core.collect --quick --out "$OUT" \
-    --bench-out /tmp/ci_bench_mapper.json
+    --bench-out BENCH_mapper.json --bench-note "ci perf smoke"
 
 echo "== II diff vs golden =="
 python scripts/diff_ii.py "$OUT" tests/golden_ii_quick.json
+
+echo "== perf smoke: quick wall time vs last recorded run =="
+python scripts/perf_smoke.py BENCH_mapper.json --max-ratio 2.0
 
 echo "CI OK"

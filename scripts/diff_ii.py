@@ -10,9 +10,11 @@ artifact, or a directory of artifacts; all are normalized to the same
 
 Fails (exit 1) if any workload/mapper pair maps to a HIGHER II than the
 golden record, or fails to map where the golden run mapped — i.e. a silent
-mapping-quality regression.  Lower IIs are reported as improvements and
-pass.  For a results cache, golden workloads missing from the results fail;
-for artifacts (a deliberately partial view) they are skipped.
+mapping-quality regression — printing an aligned per-cell diff table
+(workload × job: golden II, got II, status) for every difference.  Lower
+IIs are reported as improvements and pass.  For a results cache, golden
+workloads missing from the results fail; for artifacts (a deliberately
+partial view) they are skipped.
 """
 from __future__ import annotations
 

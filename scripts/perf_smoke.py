@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Mapper-speed smoke gate over the BENCH_mapper.json trajectory.
+
+Usage:  python scripts/perf_smoke.py [BENCH_mapper.json] [--max-ratio 2.0]
+
+Compares the **latest** recorded quick run against the **previous** one on a
+per-workload basis (the quick set has grown over time, so raw wall-clock is
+not comparable across entries) and exits non-zero when the latest run is
+more than ``--max-ratio`` times slower per workload — the guard
+``scripts/ci.sh`` applies right after its ``collect --quick`` appends a new
+entry.  With fewer than two quick runs recorded there is nothing to compare
+and the gate passes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def per_workload(run: dict) -> float:
+    n = run.get("workloads_run") or 1
+    return run["wall_s"] / n
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench", nargs="?", default="BENCH_mapper.json")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail if latest quick wall/workload exceeds the "
+                         "previous run by more than this factor")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        data = json.load(f)
+    quick = [r for r in data.get("runs", [])
+             if r.get("quick") and r.get("workloads_run")]
+    if len(quick) < 2:
+        print(f"perf-smoke: {len(quick)} quick run(s) recorded; "
+              "nothing to compare — pass")
+        return 0
+    prev, latest = quick[-2], quick[-1]
+    p, l = per_workload(prev), per_workload(latest)
+    ratio = l / p if p > 0 else float("inf")
+    hit = latest.get("route_cache_hit_rate")
+    extra = f" route-cache hit rate {hit:.1%}" if hit is not None else ""
+    print(
+        f"perf-smoke: latest {latest['wall_s']}s / "
+        f"{latest['workloads_run']} workloads = {l:.1f}s/wl "
+        f"vs previous {p:.1f}s/wl -> {ratio:.2f}x "
+        f"(max {args.max_ratio}x){extra}"
+    )
+    if ratio > args.max_ratio:
+        print(f"perf-smoke: FAIL — quick wall time regressed "
+              f"{ratio:.2f}x > {args.max_ratio}x per workload")
+        return 1
+    print("perf-smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,10 +12,12 @@ the configuration against the DFG oracle — **without re-running place &
 route**.  This is what lets a results cache / serving tier hand out mappings
 and still prove them correct on the consumer side.
 
-Schema (``repro.compiler/artifact@1``)::
+Schema (``repro.compiler/artifact@2``; ``@1`` artifacts still load —
+``route_cache`` and the place/route/negotiate timing keys are simply
+absent)::
 
     {
-      "schema":   "repro.compiler/artifact@1",
+      "schema":   "repro.compiler/artifact@2",
       "workload": {"name", "unroll", "iterations", "domain"} | {"dfg_name"},
       "arch":     "plaid2x2",          # registered arch name
       "mapper":   "hierarchical",      # registered mapper name
@@ -24,7 +26,10 @@ Schema (``repro.compiler/artifact@1``)::
       "ii":       int | null,          # null = mapper found no mapping
       "cycles":   int | null,
       "makespan": int | null,
-      "timings":  {"frontend": s, "pnr": s, "verify": s, "total": s},
+      "timings":  {"frontend": s, "pnr": s, "verify": s, "total": s,
+                   "place": s, "route": s, "negotiate": s},  # 3-way P&R split
+      "route_cache": {"hits_exact", "hits_scoped", "misses", "evictions",
+                      "hit_rate"} | null,  # cross-move route memoization
       "motifs":   {"n_units", "fanout", "fanin", "unicast", "single"} | null,
       "mappings": [{"dfg": DFG.to_json(), "ii", "place", "time", "routes",
                     "makespan"}],      # one per segment (spatial) else one
@@ -44,8 +49,11 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-ARTIFACT_SCHEMA = "repro.compiler/artifact@1"
-REPRO_VERSION = "0.2.0"
+ARTIFACT_SCHEMA = "repro.compiler/artifact@2"
+#: schemas ``load()`` accepts; @1 predates the placement engine (PR 3) and
+#: simply lacks route_cache / the per-stage P&R timing keys
+SUPPORTED_SCHEMAS = ("repro.compiler/artifact@1", ARTIFACT_SCHEMA)
+REPRO_VERSION = "0.3.0"
 
 
 def mapping_to_record(mapping) -> Dict[str, object]:
@@ -120,6 +128,7 @@ class CompileResult:
     spatial: Optional[Dict[str, object]] = None
     verified: Optional[bool] = None
     provenance: Dict[str, object] = field(default_factory=dict)
+    route_cache: Optional[Dict[str, object]] = None
 
     # -- identity ----------------------------------------------------------
     @property
@@ -154,15 +163,16 @@ class CompileResult:
             "spatial": self.spatial,
             "verified": self.verified,
             "provenance": self.provenance,
+            "route_cache": self.route_cache,
         }
 
     @classmethod
     def from_json(cls, data: Dict[str, object]) -> "CompileResult":
         schema = data.get("schema")
-        if schema != ARTIFACT_SCHEMA:
+        if schema not in SUPPORTED_SCHEMAS:
             raise ValueError(
                 f"unsupported artifact schema {schema!r} "
-                f"(expected {ARTIFACT_SCHEMA!r})"
+                f"(supported: {', '.join(SUPPORTED_SCHEMAS)})"
             )
         mappings = [normalize_record(rec) for rec in data.get("mappings", [])]
         return cls(
@@ -180,6 +190,7 @@ class CompileResult:
             spatial=data.get("spatial"),
             verified=data.get("verified"),
             provenance=data.get("provenance") or {},
+            route_cache=data.get("route_cache"),
         )
 
     def save(self, path: str) -> str:
@@ -231,6 +242,8 @@ class CompileResult:
             "verified": self.verified,
             "timings": {k: round(v, 3) for k, v in self.timings.items()},
         }
+        if self.route_cache:
+            out["route_cache"] = self.route_cache
         if self.motifs:
             out["motifs"] = self.motifs
         if self.spatial:

@@ -27,7 +27,11 @@ import os
 import sys
 from typing import Dict, List, Optional
 
-from repro.compiler.artifact import ARTIFACT_SCHEMA, CompileResult
+from repro.compiler.artifact import (
+    ARTIFACT_SCHEMA,
+    SUPPORTED_SCHEMAS,
+    CompileResult,
+)
 from repro.compiler.pipeline import (
     compile_workload,
     job_grid,
@@ -48,14 +52,16 @@ def diff_ii_maps(
 ) -> int:
     """Compare ``{workload key: {job: ii}}`` maps; returns the number of
     regressions (higher II, or unmapped where the golden run mapped) and
-    prints a line per difference.  ``require_all=False`` skips golden
-    workloads absent from ``results`` (partial runs / single artifacts)."""
+    prints a per-cell diff table for every difference.  ``require_all=False``
+    skips golden workloads absent from ``results`` (partial runs / single
+    artifacts)."""
     bad = better = same = skipped = 0
+    rows: List[tuple] = []  # (workload, job, golden, got, status)
     for key, want_ii in sorted(golden.items()):
         rec = results.get(key)
         if rec is None:
             if require_all:
-                print(f"MISSING {key}: not in results")
+                rows.append((key, "*", "-", "missing", "MISSING"))
                 bad += 1
             else:
                 skipped += 1
@@ -65,7 +71,7 @@ def diff_ii_maps(
                 if require_all:
                     # a full results cache must cover every golden job — a
                     # renamed/unregistered mapper is a coverage regression
-                    print(f"MISSING {key}/{job}: not in results")
+                    rows.append((key, job, want, "missing", "MISSING"))
                     bad += 1
                 else:
                     skipped += 1  # partial artifact view: job not exercised
@@ -74,16 +80,24 @@ def diff_ii_maps(
             if want is None:
                 same += 1  # golden found nothing; anything is no worse
             elif got is None:
-                print(f"REGRESSION {key}/{job}: golden II {want}, got None")
+                rows.append((key, job, want, "None", "REGRESSION"))
                 bad += 1
             elif got > want:
-                print(f"REGRESSION {key}/{job}: II {want} -> {got}")
+                rows.append((key, job, want, got, "REGRESSION"))
                 bad += 1
             elif got < want:
-                print(f"improved {key}/{job}: II {want} -> {got}")
+                rows.append((key, job, want, got, "improved"))
                 better += 1
             else:
                 same += 1
+    if rows:
+        header = ("workload", "job", "golden II", "got II", "status")
+        table = [header] + [tuple(str(c) for c in r) for r in rows]
+        widths = [max(len(r[i]) for r in table) for i in range(len(header))]
+        for i, r in enumerate(table):
+            print("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip())
+            if i == 0:
+                print("  ".join("-" * w for w in widths))
     for key, rec in sorted(results.items()):
         extra = [j for j in rec if key not in golden or j not in golden[key]]
         for j in extra:
@@ -208,11 +222,35 @@ def _cmd_compile(args) -> int:
     return 1 if res.verified is False else 0
 
 
+def _stage_line(art: CompileResult) -> Optional[str]:
+    """One-line place/route/negotiate split + route-cache hit rate for
+    artifacts produced by the placement engine (schema @2)."""
+    tm = art.timings
+    if "place" not in tm and not art.route_cache:
+        return None  # pre-engine artifact (@1): no split recorded
+    parts = []
+    for stage in ("place", "route", "negotiate"):
+        if stage in tm:
+            parts.append(f"{stage}={tm[stage]:.3f}s")
+    if art.route_cache:
+        rc_ = art.route_cache
+        parts.append(
+            f"route-cache {100.0 * rc_.get('hit_rate', 0.0):.1f}% hits "
+            f"({rc_.get('hits_exact', 0)} exact + "
+            f"{rc_.get('hits_scoped', 0)} scoped / "
+            f"{rc_.get('misses', 0)} misses)"
+        )
+    return "  ".join(parts)
+
+
 def _cmd_inspect(args) -> int:
     rc = 0
     for path in args.artifacts:
         art = CompileResult.load(path)
         print(json.dumps(art.summary(), indent=1))
+        stages = _stage_line(art)
+        if stages:
+            print(f"{path}: {stages}")
         if args.verify:
             if not art.mappings:
                 print(f"{path}: no stored mapping to verify")
@@ -276,7 +314,7 @@ def _cmd_diff(args) -> int:
 def _is_artifact(path: str) -> bool:
     try:
         with open(path) as f:
-            return json.load(f).get("schema") == ARTIFACT_SCHEMA
+            return json.load(f).get("schema") in SUPPORTED_SCHEMAS
     except (OSError, ValueError):
         return False
 

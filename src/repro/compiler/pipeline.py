@@ -187,6 +187,11 @@ def compile(
     result = mapper_obj.map(dfg)
     t_pnr = time.perf_counter()
 
+    # per-stage P&R split + route-cache counters (mappers that predate the
+    # placement engine simply do not expose engine_stats)
+    est = getattr(mapper_obj, "engine_stats", None)
+    est = est() if callable(est) else None
+
     out = CompileResult(
         arch=arch_name,
         mapper=mapper_name,
@@ -232,6 +237,17 @@ def compile(
         "verify": t_verify - t_pnr,
         "total": time.perf_counter() - t0,
     }
+    if est is not None:
+        pnr = out.timings["pnr"]
+        route = float(est.get("route_s", 0.0))
+        negotiate = float(est.get("negotiate_s", 0.0))
+        # "route" carries ALL router wall time (including re-routes issued
+        # by negotiation rounds); "negotiate" is only the rounds' non-route
+        # share (rip-up, bookkeeping) so the three stages partition P&R
+        out.timings["route"] = route
+        out.timings["negotiate"] = negotiate
+        out.timings["place"] = max(0.0, pnr - route - negotiate)
+        out.route_cache = est.get("route_cache")
     return out
 
 

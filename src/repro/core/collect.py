@@ -108,6 +108,8 @@ def run_job(task: Tuple[str, int, str]):
         )
         out["ii"] = res.ii
         out["cycles"] = res.cycles
+        if res.route_cache:
+            out["route_cache"] = res.route_cache
         if job in VERIFY_JOBS:
             out["verified"] = bool(res.verified)
     out["wall_s"] = time.time() - t0
@@ -130,6 +132,20 @@ def _finalize(w, parts: Dict[str, Dict], grid_jobs) -> Dict:
         "wall_s": round(sum(p["wall_s"] for p in parts.values()), 1),
     }
     rec["cycles"]["spatial"] = parts["spatial"]["cycles"]
+    hits = sum(
+        p["route_cache"]["hits_exact"] + p["route_cache"]["hits_scoped"]
+        for p in parts.values() if "route_cache" in p
+    )
+    misses = sum(
+        p["route_cache"]["misses"]
+        for p in parts.values() if "route_cache" in p
+    )
+    if hits or misses:
+        rec["route_cache"] = {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": round(hits / (hits + misses), 4),
+        }
     return rec
 
 
@@ -144,7 +160,7 @@ def _append_bench(bench_path: str, entry: Dict):
 
 
 def collect(out_path: str, quick: bool = False, jobs: int = 0,
-            bench_path: str = BENCH_PATH):
+            bench_path: str = BENCH_PATH, bench_note: str = ""):
     results = {}
     if os.path.exists(out_path):  # resume
         with open(out_path) as f:
@@ -184,16 +200,22 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
                 consume(pool.imap_unordered(run_job, tasks))
         else:
             consume(map(run_job, tasks))
-        _append_bench(bench_path, {
+        cells = [results[k] for k in by_key if k in results]
+        hits = sum(c.get("route_cache", {}).get("hits", 0) for c in cells)
+        misses = sum(c.get("route_cache", {}).get("misses", 0) for c in cells)
+        entry = {
             "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "quick": quick,
             "jobs": n_jobs,
             "workloads_run": len(pending),
             "wall_s": round(time.time() - t_start, 1),
-            "cpu_s": round(
-                sum(results[k]["wall_s"] for k in by_key if k in results), 1
-            ),
-        })
+            "cpu_s": round(sum(c["wall_s"] for c in cells), 1),
+        }
+        if hits or misses:
+            entry["route_cache_hit_rate"] = round(hits / (hits + misses), 4)
+        if bench_note:
+            entry["note"] = bench_note
+        _append_bench(bench_path, entry)
     return results
 
 
@@ -205,5 +227,8 @@ if __name__ == "__main__":
                     help="worker processes (default: CPU count; 1 = serial)")
     ap.add_argument("--bench-out", default=BENCH_PATH,
                     help="mapper-speed trajectory JSON")
+    ap.add_argument("--bench-note", default="",
+                    help="tag recorded with the bench entry (e.g. CI smoke)")
     args = ap.parse_args()
-    collect(args.out, args.quick, jobs=args.jobs, bench_path=args.bench_out)
+    collect(args.out, args.quick, jobs=args.jobs, bench_path=args.bench_out,
+            bench_note=args.bench_note)

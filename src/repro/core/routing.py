@@ -18,7 +18,12 @@ the static structures that let the router prune those states up front:
 * per-FU caches — ``starts(fu)`` (the resources a value lands on one cycle
   after production, see :func:`repro.core.mapper.start_resources`) and
   ``h_to_reads(fu)`` (minimum hops from every resource to any resource the
-  FU's operand mux can read: the A* heuristic / pruning table).
+  FU's operand mux can read: the A* heuristic / pruning table);
+* FU×FU span matrices — ``min_span_mat`` (the cheap Manhattan heuristic) and
+  ``route_span_mat`` (the exact minimum route latency from the distance
+  tables), used by the mappers' vectorized candidate filters;
+* :class:`RouteCache` — cross-move route memoization for the per-edge router,
+  keyed on the MRRG's occupancy state (see the class docstring).
 
 Engines are cached on the architecture object itself (``engine_for``), so the
 distance tables are computed once per process per fabric and shared by every
@@ -26,11 +31,134 @@ MRRG / mapper instance, including the spatial mapper's II=1 runs.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 UNREACH = 1 << 20  # larger than any feasible span; small enough to add safely
+
+_M64 = (1 << 64) - 1
+
+
+def mix64(k: int, net: int, t: int) -> int:
+    """Deterministic 64-bit mixer for the MRRG occupancy hash.
+
+    Maps one (slot, net, abs-cycle) reservation to a pseudo-random 64-bit
+    word; the MRRG folds these into ``state_hash`` with XOR, so reserving and
+    then releasing the same value restores the hash exactly (the property the
+    exact tier of :class:`RouteCache` relies on).  Constants are the
+    splitmix64 increments; the function is pure and process-independent.
+    """
+    h = (k * 0x9E3779B97F4A7C15) ^ (net * 0xC2B2AE3D27D4EB4F) \
+        ^ (t * 0x165667B19E3779F9)
+    h &= _M64
+    h ^= h >> 29
+    h = (h * 0xBF58476D1CE4E5B9) & _M64
+    h ^= h >> 32
+    return h
+
+
+#: sentinel distinguishing "no cached entry" from a cached ``None`` (the
+#: router legitimately returns None for unroutable queries, and caching those
+#: failures is as valuable as caching successes)
+ROUTE_MISS = object()
+
+
+class RouteCache:
+    """Cross-move route memoization for :func:`repro.core.mapper.route_edge`.
+
+    Two tiers, both deterministic:
+
+    * **exact** — entries are keyed on the full query ``(ii, net, src_fu,
+      dst_fu, t_src, t_dst, allow_overuse)`` *plus* the MRRG's global
+      occupancy hash (``state_hash``, an XOR-fold of every live reservation)
+      and history version.  A hit is only possible when the whole MRRG is in
+      a previously-seen state, so the cached result is what the search would
+      have returned — results are bit-identical to an uncached run.  This is
+      the tier that pays off: candidate-evaluation loops place, route and
+      roll back, returning the MRRG to earlier states over and over (the
+      chosen candidate is always re-routed at least once), and multi-start
+      restarts replay long identical prefixes from the empty fabric.
+    * **scoped** (opt-in) — entries keyed on the query alone, validated by
+      per-slot epochs: a reserve/release (or history bump) touching any slot
+      of the cached path invalidates it.  A scoped hit returns a path whose
+      slots are untouched — still feasible, identical cost — but possibly no
+      longer globally optimal, so it can steer the search differently.  Only
+      mappers with their own golden records enable it
+      (``negotiation="selective"``).
+
+    Cached failures (``None``) live in the exact tier only: a failure proves
+    nothing about path slots.
+    """
+
+    def __init__(self, scoped: bool = False, max_entries: int = 1 << 18):
+        self.scoped = scoped
+        self.max_entries = max_entries
+        self._exact: Dict[tuple, object] = {}
+        self._scoped: Dict[tuple, tuple] = {}
+        self.hits_exact = 0
+        self.hits_scoped = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def lookup(self, mrrg, key):
+        """Cached route result for ``key``, or :data:`ROUTE_MISS`."""
+        r = self._exact.get((key, mrrg.state_hash, mrrg.hist_ver), ROUTE_MISS)
+        if r is not ROUTE_MISS:
+            self.hits_exact += 1
+            return r
+        if self.scoped:
+            ent = self._scoped.get(key)
+            if ent is not None:
+                path, cost, slots, stamp, gen = ent
+                if gen != mrrg.gen:
+                    # entry from an earlier MRRG (restart/new II): its epoch
+                    # stamp is meaningless against this MRRG's counters
+                    del self._scoped[key]
+                else:
+                    ep = mrrg.slot_epoch
+                    for k in slots:
+                        if ep[k] > stamp:
+                            del self._scoped[key]  # a slot changed: stale
+                            break
+                    else:
+                        self.hits_scoped += 1
+                        return path, cost
+        self.misses += 1
+        return ROUTE_MISS
+
+    def store(self, mrrg, key, result):
+        if len(self._exact) >= self.max_entries:
+            self._exact.clear()
+            self.evictions += 1
+        self._exact[(key, mrrg.state_hash, mrrg.hist_ver)] = result
+        if self.scoped and result is not None:
+            if len(self._scoped) >= self.max_entries:
+                self._scoped.clear()
+                self.evictions += 1
+            path, cost = result
+            ii = mrrg.ii
+            slots = [rid * ii + t % ii for rid, t in path]
+            self._scoped[key] = (path, cost, slots, mrrg.epoch, mrrg.gen)
+
+    # -- reporting ---------------------------------------------------------
+    @property
+    def hits(self) -> int:
+        return self.hits_exact + self.hits_scoped
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    def counters(self) -> Dict[str, object]:
+        lk = self.lookups
+        return {
+            "hits_exact": self.hits_exact,
+            "hits_scoped": self.hits_scoped,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": round(self.hits / lk, 4) if lk else 0.0,
+        }
 
 
 class RoutingEngine:
@@ -52,6 +180,9 @@ class RoutingEngine:
         self._starts: Dict[int, List[int]] = {}
         self._h: Dict[int, List[int]] = {}
         self._min_fu_span: Dict[Tuple[int, int], int] = {}
+        self._min_span_mat: Optional[np.ndarray] = None
+        self._route_span_mat: Optional[np.ndarray] = None
+        self._fu_aux: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray, int]] = None
 
     # -- static tables -------------------------------------------------------
     def _all_pairs_hops(self) -> np.ndarray:
@@ -107,6 +238,54 @@ class RoutingEngine:
             span = 1 + best if best < UNREACH else UNREACH
             self._min_fu_span[key] = span
         return span
+
+    # -- vectorized-filter tables (lazy; FU×FU, so tiny) ---------------------
+    def min_span_mat(self) -> np.ndarray:
+        """``min_span(arch, fus[i], fus[j])`` as an int32 matrix — the cheap
+        Manhattan heuristic the mappers' ``_span_ok`` filter uses, exposed
+        for numpy fancy-indexing over flat candidate arrays."""
+        if self._min_span_mat is None:
+            from repro.core.mapper import min_span
+
+            fus = self.arch.fus
+            n = len(fus)
+            m = np.empty((n, n), dtype=np.int32)
+            for i in range(n):
+                for j in range(n):
+                    m[i, j] = min_span(self.arch, fus[i], fus[j])
+            self._min_span_mat = m
+        return self._min_span_mat
+
+    def route_span_mat(self) -> np.ndarray:
+        """:meth:`min_route_span` as an int32 matrix (``UNREACH`` where no
+        route exists) for the vectorized exact-reachability filter."""
+        if self._route_span_mat is None:
+            fus = self.arch.fus
+            n = len(fus)
+            m = np.empty((n, n), dtype=np.int32)
+            for i in range(n):
+                for j in range(n):
+                    m[i, j] = self.min_route_span(fus[i], fus[j])
+            self._route_span_mat = m
+        return self._route_span_mat
+
+    def fu_aux(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """Per-FU tile coordinate / tile-index arrays ``(fx, fy, tile_idx,
+        n_tiles)`` backing the vectorized busy/locality candidate scoring."""
+        if self._fu_aux is None:
+            fus = self.arch.fus
+            fx = np.asarray([fu.tile[0] for fu in fus], dtype=np.int64)
+            fy = np.asarray([fu.tile[1] for fu in fus], dtype=np.int64)
+            tiles = sorted({fu.tile for fu in fus})
+            t_idx = {t: i for i, t in enumerate(tiles)}
+            tile_idx = np.asarray([t_idx[fu.tile] for fu in fus], dtype=np.int64)
+            self._tile_index = t_idx
+            self._fu_aux = (fx, fy, tile_idx, len(tiles))
+        return self._fu_aux
+
+    def tile_index(self) -> Dict[Tuple[int, int], int]:
+        self.fu_aux()
+        return self._tile_index
 
 
 def engine_for(arch) -> RoutingEngine:

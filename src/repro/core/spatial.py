@@ -223,16 +223,25 @@ class SpatialPipelineMapper:
                  time_budget: Optional[int] = None):
         self.arch = arch
         self.seed = seed
+        self._mapper: Optional[SpatialMapper] = None
 
     def map(self, dfg: DFG) -> SpatialResult:
-        return map_spatial(dfg, self.arch, seed=self.seed)
+        # keep a handle on the inner II=1 mapper so the pipeline can read
+        # its route/cache accounting (engine_stats) after the run
+        self._mapper = SpatialMapper(self.arch, seed=self.seed)
+        return map_spatial(dfg, self.arch, seed=self.seed, mapper=self._mapper)
+
+    def engine_stats(self):
+        return self._mapper.engine_stats() if self._mapper is not None else None
 
 
-def map_spatial(dfg: DFG, arch: Optional[Arch] = None, seed: int = 0) -> SpatialResult:
+def map_spatial(dfg: DFG, arch: Optional[Arch] = None, seed: int = 0,
+                mapper: Optional[SpatialMapper] = None) -> SpatialResult:
     arch = arch or make_arch("spatial4x4")
     # II=1 segment P&R shares the per-fabric routing engine (distance
     # tables) with the modulo mappers via the cache on the Arch instance.
-    mapper = SpatialMapper(arch, seed=seed)
+    if mapper is None:
+        mapper = SpatialMapper(arch, seed=seed)
     whole = mapper.map(dfg)
     if whole is not None:
         return SpatialResult([whole], 0)

@@ -190,3 +190,49 @@ def test_cli_diff_flags_regression(tmp_path):
     bad = str(tmp_path / "bad.json")
     res.save(bad)
     assert main(["diff", good, bad]) == 1
+
+
+# -- placement-engine surface (schema @2) ------------------------------------
+
+
+def test_timing_split_and_route_cache_in_artifact(tmp_path):
+    res = compile("atax", unroll=2, arch="plaid2x2", mapper="pathfinder")
+    tm = res.timings
+    for stage in ("place", "route", "negotiate"):
+        assert stage in tm and tm[stage] >= 0.0
+    # the three stages partition P&R wall time (up to timer noise)
+    assert tm["place"] + tm["route"] + tm["negotiate"] <= tm["pnr"] + 0.05
+    assert res.route_cache is not None
+    assert res.route_cache["hits_exact"] + res.route_cache["misses"] > 0
+    loaded = CompileResult.load(res.save(str(tmp_path / "a.json")))
+    assert loaded.route_cache == res.route_cache
+    assert loaded.timings == res.timings
+    assert "route_cache" in loaded.summary()
+
+
+def test_artifact_v1_backward_compatible(tmp_path):
+    from repro.compiler.artifact import ARTIFACT_SCHEMA
+
+    res = compile("atax", unroll=2)
+    data = res.to_json()
+    # regress the payload to the PR 2 schema: no route_cache, no P&R split
+    data["schema"] = "repro.compiler/artifact@1"
+    del data["route_cache"]
+    for stage in ("place", "route", "negotiate"):
+        data["timings"].pop(stage, None)
+    path = str(tmp_path / "v1.json")
+    with open(path, "w") as f:
+        json.dump(data, f)
+    loaded = CompileResult.load(path)
+    assert loaded.ii == res.ii
+    assert loaded.route_cache is None
+    loaded.simulate(iterations=3)  # mappings still verify without P&R
+    # and a v1 artifact re-saves under the current schema
+    resaved = CompileResult.load(loaded.save(str(tmp_path / "v2.json")))
+    assert resaved.to_json()["schema"] == ARTIFACT_SCHEMA
+
+    data["schema"] = "repro.compiler/artifact@0"
+    with open(path, "w") as f:
+        json.dump(data, f)
+    with pytest.raises(ValueError):
+        CompileResult.load(path)

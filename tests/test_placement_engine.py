@@ -1,0 +1,259 @@
+"""Placement acceleration engine regression tests.
+
+Three properties guard the engine (see docs/mapper.md, "The placement
+engine"):
+
+* **route cache** — the MRRG occupancy hash reverts when reservations are
+  rolled back (exact-tier hits are provably bit-identical), per-slot epochs
+  invalidate scoped entries whose path resources were touched by
+  reserve/release, and cache behaviour is deterministic at fixed seeds;
+* **candidate ordering** — the vectorized distance-guided scan must pick the
+  same placements as the scalar reference scan: fixed-seed mappings (II,
+  placement, routes) are bit-identical with ordering on vs off for the
+  default (``negotiation="full"``) modes, across ``quick_workloads()``;
+* **selective negotiation** — ``negotiation="selective"`` reproduces its own
+  golden record and is II-no-worse than the full policy's golden on every
+  quick cell.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.arch import make_arch
+from repro.core.mapper import (
+    MRRG,
+    HierarchicalMapper,
+    NodeGreedyMapper,
+    PathFinderMapper2,
+    route_edge,
+)
+from repro.core.routing import ROUTE_MISS, RouteCache, engine_for
+from repro.core.workloads import quick_workloads
+
+GOLDEN_FULL = os.path.join(os.path.dirname(__file__), "golden_ii_quick.json")
+GOLDEN_SELECTIVE = os.path.join(
+    os.path.dirname(__file__), "golden_ii_quick_selective.json"
+)
+
+with open(GOLDEN_FULL) as _f:
+    _FULL_II = json.load(_f)
+with open(GOLDEN_SELECTIVE) as _f:
+    _SELECTIVE_II = json.load(_f)
+
+QUICK_SET = [(w.name, w.unroll) for w in quick_workloads()]
+
+
+# ---------------------------------------------------------------------------
+# Route cache: state hash, epochs, tiers
+# ---------------------------------------------------------------------------
+
+
+def _routable_pair(arch, max_span=4):
+    """A (src_fu, dst_fu, span) triple the router can satisfy."""
+    eng = engine_for(arch)
+    for s in arch.fus:
+        for d in arch.fus:
+            if s.id == d.id:
+                continue
+            sp = eng.min_route_span(s, d)
+            if sp <= max_span:
+                return s, d, sp
+    raise AssertionError("no routable FU pair found")
+
+
+def test_state_hash_reverts_on_rollback():
+    arch = make_arch("st4x4")
+    mrrg = MRRG(arch, 2)
+    s, d, sp = _routable_pair(arch)
+    r = route_edge(mrrg, 7, s, d, 0, sp)
+    assert r is not None
+    path, _ = r
+    assert mrrg.state_hash == 0
+    ep_before = list(mrrg.slot_epoch)
+    mrrg.reserve(7, path)
+    assert mrrg.state_hash != 0
+    touched = {rid * mrrg.ii + t % mrrg.ii for rid, t in path}
+    for k in touched:
+        assert mrrg.slot_epoch[k] > ep_before[k]
+    mrrg.release(7, path)
+    # occupancy state fully rolled back: hash reverts exactly...
+    assert mrrg.state_hash == 0
+    # ...but the epochs keep advancing (scoped invalidation is monotone)
+    for k in touched:
+        assert mrrg.slot_epoch[k] > ep_before[k]
+
+
+def test_route_cache_exact_tier_and_epoch_invalidation():
+    arch = make_arch("st4x4")
+    mrrg = MRRG(arch, 2)
+    s, d, sp = _routable_pair(arch)
+    cache = RouteCache(scoped=True)
+    r1 = route_edge(mrrg, 7, s, d, 0, sp, cache=cache)
+    assert r1 is not None and cache.misses == 1 and cache.hits == 0
+    r2 = route_edge(mrrg, 7, s, d, 0, sp, cache=cache)
+    assert r2 == r1 and cache.hits_exact == 1
+
+    path, _ = r1
+    # reserving the cached path touches its slots: the exact tier misses
+    # (state hash moved) and the scoped entry is invalidated by epoch
+    mrrg.reserve(7, path)
+    key = (mrrg.ii, 7, s.id, d.id, 0, sp, False)
+    assert cache.lookup(mrrg, key) is ROUTE_MISS
+    misses = cache.misses
+    # rollback restores the occupancy hash: the exact tier hits again
+    mrrg.release(7, path)
+    hit = cache.lookup(mrrg, key)
+    assert hit == r1 and cache.hits_exact == 2 and cache.misses == misses
+
+
+def test_route_cache_scoped_tier_survives_disjoint_changes():
+    arch = make_arch("st4x4")
+    mrrg = MRRG(arch, 2)
+    s, d, sp = _routable_pair(arch)
+    cache = RouteCache(scoped=True)
+    r1 = route_edge(mrrg, 7, s, d, 0, sp, cache=cache)
+    path, _ = r1
+    path_rids = {rid for rid, _ in path}
+    other = next(r.id for r in arch.rnodes if r.id not in path_rids)
+    # a reservation on a DIFFERENT resource moves the global state (exact
+    # tier misses) but leaves the cached path's slots untouched: scoped hit
+    mrrg.reserve(99, [(other, 1)])
+    key = (mrrg.ii, 7, s.id, d.id, 0, sp, False)
+    hit = cache.lookup(mrrg, key)
+    assert hit == r1
+    assert cache.hits_scoped == 1 and cache.hits_exact == 0
+    # touching a path slot invalidates the scoped entry too
+    rid0, t0 = path[0]
+    mrrg.reserve(99, [(rid0, t0)])
+    assert cache.lookup(mrrg, key) is ROUTE_MISS
+
+
+def test_route_cache_scoped_tier_rejects_other_mrrg_entries():
+    """Scoped entries are per-MRRG: a fresh MRRG restarts its epoch counter
+    at 0, so a stamp recorded by an earlier MRRG proves nothing — the entry
+    must be dropped, not served (regression: restart 1 once reused restart
+    0's path through slots that were occupied in the new fabric state)."""
+    arch = make_arch("st4x4")
+    mrrg_a = MRRG(arch, 2)
+    s, d, sp = _routable_pair(arch)
+    cache = RouteCache(scoped=True)
+    r1 = route_edge(mrrg_a, 7, s, d, 0, sp, cache=cache)
+    assert r1 is not None
+    mrrg_b = MRRG(arch, 2)  # fresh fabric: epochs restart
+    path, _ = r1
+    mrrg_b.reserve(99, path)  # occupy the cached path's slots in B
+    key = (mrrg_b.ii, 7, s.id, d.id, 0, sp, False)
+    assert cache.lookup(mrrg_b, key) is ROUTE_MISS
+    assert cache.hits_scoped == 0
+
+
+def test_route_cache_hit_determinism_at_fixed_seed(workload_dfg):
+    g = workload_dfg("atax", 2)
+    snaps = []
+    for _ in range(2):
+        m = HierarchicalMapper(make_arch("plaid2x2"), seed=0, time_budget=600)
+        m.restarts = 4
+        r = m.map(g)
+        st = m.engine_stats()
+        snaps.append((r.ii, st["route_calls"], st["route_cache"]))
+    assert snaps[0] == snaps[1]
+    assert snaps[0][2]["hits_exact"] > 0  # the cache actually fires
+
+
+# ---------------------------------------------------------------------------
+# Candidate ordering: vectorized scan == scalar reference scan
+# ---------------------------------------------------------------------------
+
+
+def _map_with_ordering(cls, arch_name, dfg, ordering):
+    cls.candidate_ordering = ordering
+    try:
+        m = cls(make_arch(arch_name), seed=0, time_budget=600)
+        m.restarts = 4
+        return m.map(dfg)
+    finally:
+        cls.candidate_ordering = True
+
+
+def _assert_bit_identical(a, b, label):
+    assert (a is None) == (b is None), f"{label}: mapped-ness differs"
+    if a is not None:
+        assert a.ii == b.ii, f"{label}: II {a.ii} != {b.ii}"
+        assert a.place == b.place, f"{label}: placements differ"
+        assert a.time == b.time, f"{label}: schedules differ"
+        assert a.routes == b.routes, f"{label}: routes differ"
+
+
+@pytest.mark.parametrize("name,unroll", QUICK_SET)
+def test_ordering_equivalence_hierarchical(name, unroll, workload_dfg):
+    g = workload_dfg(name, unroll)
+    a = _map_with_ordering(HierarchicalMapper, "plaid2x2", g, True)
+    b = _map_with_ordering(HierarchicalMapper, "plaid2x2", g, False)
+    _assert_bit_identical(a, b, f"{name}_u{unroll}/hierarchical")
+
+
+@pytest.mark.parametrize("name,unroll", [("atax", 2), ("gemm", 2), ("bicg", 2)])
+def test_ordering_equivalence_node_greedy(name, unroll, workload_dfg):
+    g = workload_dfg(name, unroll)
+    a = _map_with_ordering(NodeGreedyMapper, "st4x4", g, True)
+    b = _map_with_ordering(NodeGreedyMapper, "st4x4", g, False)
+    _assert_bit_identical(a, b, f"{name}_u{unroll}/node_greedy")
+
+
+@pytest.mark.parametrize("name,unroll", [("atax", 2), ("gemver", 2)])
+def test_ordering_equivalence_pathfinder_full(name, unroll, workload_dfg):
+    """The default ("full") negotiation mode must be unaffected by the
+    ordering switch — selective is the only mode allowed to diverge."""
+    g = workload_dfg(name, unroll)
+    a = _map_with_ordering(PathFinderMapper2, "plaid2x2", g, True)
+    b = _map_with_ordering(PathFinderMapper2, "plaid2x2", g, False)
+    _assert_bit_identical(a, b, f"{name}_u{unroll}/pathfinder-full")
+
+
+# ---------------------------------------------------------------------------
+# Selective negotiation: own golden + no worse than full
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,unroll", QUICK_SET)
+def test_selective_negotiation_golden_and_ab_gate(name, unroll, workload_dfg):
+    g = workload_dfg(name, unroll)
+    m = PathFinderMapper2(
+        make_arch("plaid2x2"), seed=0, negotiation="selective"
+    )
+    r = m.map(g)
+    key = f"{name}_u{unroll}"
+    want = _SELECTIVE_II[key]["pf_on_plaid"]
+    got = r.ii if r is not None else None
+    if want is None:
+        return  # golden found nothing; anything is no worse
+    assert got is not None, f"{key}: selective golden II {want}, got None"
+    assert got <= want, f"{key}: selective II regressed {want} -> {got}"
+    full = _FULL_II[key]["pf_on_plaid"]
+    if full is not None:
+        assert got <= full, (
+            f"{key}: selective II {got} worse than full-negotiation {full}"
+        )
+
+
+def test_negotiation_option_validated():
+    with pytest.raises(ValueError):
+        PathFinderMapper2(make_arch("plaid2x2"), negotiation="bogus")
+
+
+def test_mapper_instance_reuse_matches_fresh_mapper(workload_dfg):
+    """One mapper mapping several DFGs back to back (the spatial segment
+    path) must behave exactly like fresh mappers: every cache keyed on node
+    ids (scan memo, candidate arrays, route cache) resets per DFG.
+    Regression test — a stale scan-memo hit once shifted a spatial segment's
+    makespan by one cycle."""
+    g1, g2 = workload_dfg("atax", 2), workload_dfg("bicg", 2)
+    reused = NodeGreedyMapper(make_arch("st4x4"), seed=0, time_budget=600)
+    reused.restarts = 4
+    reused.map(g1)
+    got = reused.map(g2)
+    fresh = NodeGreedyMapper(make_arch("st4x4"), seed=0, time_budget=600)
+    fresh.restarts = 4
+    want = fresh.map(g2)
+    _assert_bit_identical(got, want, "bicg_u2/reused-mapper")
