@@ -44,6 +44,28 @@ timeout "$BUDGET" python -m repro.core.collect --quick --out "$OUT" \
 echo "== II diff vs golden =="
 python scripts/diff_ii.py "$OUT" tests/golden_ii_quick.json
 
+echo "== store roundtrip: warm second pass must be a 100% hit =="
+STORE_DIR=$(mktemp -d /tmp/ci_store.XXXXXX)
+S1=$(mktemp /tmp/ci_store_r1.XXXXXX.json); rm -f "$S1"
+S2=$(mktemp /tmp/ci_store_r2.XXXXXX.json); rm -f "$S2"
+SBENCH=$(mktemp /tmp/ci_store_bench.XXXXXX.json); rm -f "$SBENCH"
+# same cell twice through the artifact store: the first pass compiles and
+# inserts, the second must be served entirely from cache (zero P&R)
+timeout "$BUDGET" python -m repro.core.collect --quick --workloads atax_u2 \
+    --out "$S1" --store "$STORE_DIR" --bench-out "$SBENCH"
+timeout "$BUDGET" python -m repro.core.collect --quick --workloads atax_u2 \
+    --out "$S2" --store "$STORE_DIR" --bench-out "$SBENCH"
+python - "$S1" "$S2" "$SBENCH" <<'EOF'
+import json, sys
+r1, r2, bench = (json.load(open(p)) for p in sys.argv[1:4])
+c1, c2 = r1["atax_u2"], r2["atax_u2"]
+assert c1["ii"] == c2["ii"], f"II drifted on store hit: {c1['ii']} != {c2['ii']}"
+assert c1["cycles"] == c2["cycles"], "cycles drifted on store hit"
+last = bench["runs"][-1]["store"]
+assert last["misses"] == 0 and last["hit_rate"] == 1.0, f"warm pass not 100% hits: {last}"
+print(f"store roundtrip OK: {last['hits']} hits / 0 misses, II+cycles identical")
+EOF
+
 echo "== perf smoke: quick wall time vs last recorded run =="
 python scripts/perf_smoke.py BENCH_mapper.json --max-ratio 2.0
 

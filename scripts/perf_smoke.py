@@ -10,6 +10,11 @@ more than ``--max-ratio`` times slower per workload — the guard
 ``scripts/ci.sh`` applies right after its ``collect --quick`` appends a new
 entry.  With fewer than two quick runs recorded there is nothing to compare
 and the gate passes.
+
+Runs that went through an artifact store are excluded from the comparison
+entirely: warm hits skip place & route (wall time says nothing about
+mapper speed), and even cold store passes pay per-cell entry-write and
+index overhead that is not mapper time.
 """
 from __future__ import annotations
 
@@ -34,7 +39,8 @@ def main(argv=None) -> int:
     with open(args.bench) as f:
         data = json.load(f)
     quick = [r for r in data.get("runs", [])
-             if r.get("quick") and r.get("workloads_run")]
+             if r.get("quick") and r.get("workloads_run")
+             and "store" not in r]
     if len(quick) < 2:
         print(f"perf-smoke: {len(quick)} quick run(s) recorded; "
               "nothing to compare — pass")

@@ -29,9 +29,13 @@ from repro.compiler.registry import (  # noqa: F401  (leaf-level, safe eager)
 _LAZY = {
     "compile": ("repro.compiler.pipeline", "compile"),
     "compile_workload": ("repro.compiler.pipeline", "compile"),
+    "compile_key": ("repro.compiler.pipeline", "compile_key"),
     "job_grid": ("repro.compiler.pipeline", "job_grid"),
     "CompileResult": ("repro.compiler.artifact", "CompileResult"),
     "ARTIFACT_SCHEMA": ("repro.compiler.artifact", "ARTIFACT_SCHEMA"),
+    "ArtifactStore": ("repro.compiler.store", "ArtifactStore"),
+    "CompileKey": ("repro.compiler.store", "CompileKey"),
+    "StoreIntegrityError": ("repro.compiler.store", "StoreIntegrityError"),
     # registry lookups go through the pipeline module so that the built-in
     # mappers/arches are registered before the first query
     "get_mapper": ("repro.compiler.pipeline", "get_mapper"),

@@ -18,7 +18,8 @@ absent)::
 
     {
       "schema":   "repro.compiler/artifact@2",
-      "workload": {"name", "unroll", "iterations", "domain"} | {"dfg_name"},
+      "workload": {"name", "unroll", "iterations", "domain"}
+                  | {"dfg_name", "iterations", "dfg_sha256"},  # raw-DFG input
       "arch":     "plaid2x2",          # registered arch name
       "mapper":   "hierarchical",      # registered mapper name
       "seed":     0,
@@ -76,11 +77,17 @@ def normalize_record(rec: Dict[str, object]) -> Dict[str, object]:
     form (string keys -> ints, route steps as 2-lists) — the single place
     that knows the record's key/value types; shared by ``from_json`` and
     ``mapping_from_record`` so a load -> to_json round-trip is
-    value-identical to :func:`mapping_to_record` output."""
+    value-identical to :func:`mapping_to_record` output.
+
+    ``ii``/``makespan`` may be ``null`` (the mapper found no mapping or an
+    analytic spatial segment): the record still loads — only
+    :meth:`CompileResult.simulate` refuses to run on it."""
+    ii = rec.get("ii")
+    makespan = rec.get("makespan")
     return {
         "dfg": rec["dfg"],
-        "ii": int(rec["ii"]),
-        "makespan": int(rec["makespan"]),
+        "ii": None if ii is None else int(ii),
+        "makespan": None if makespan is None else int(makespan),
         "place": {int(n): int(fu) for n, fu in rec["place"].items()},
         "time": {int(n): int(t) for n, t in rec["time"].items()},
         "routes": {
@@ -100,6 +107,11 @@ def mapping_from_record(rec: Dict[str, object], arch_name: str):
     from repro.core.mapper import Mapping
 
     rec = normalize_record(rec)
+    if rec["ii"] is None:
+        raise ValueError(
+            "mapping record has ii=null (no mapping found); nothing to "
+            "rebuild"
+        )
     dfg = DFG.from_json(rec["dfg"])
     m = Mapping(make_arch(arch_name), dfg, rec["ii"])
     m.place = dict(rec["place"])
@@ -129,6 +141,11 @@ class CompileResult:
     verified: Optional[bool] = None
     provenance: Dict[str, object] = field(default_factory=dict)
     route_cache: Optional[Dict[str, object]] = None
+    #: set by ``compile(..., store=...)`` only: True = served from the
+    #: store without P&R, False = freshly compiled (and inserted), None =
+    #: no store involved.  Runtime-only — never serialized, so a hit
+    #: round-trips byte-identically to the artifact it was stored from.
+    store_hit: Optional[bool] = field(default=None, compare=False)
 
     # -- identity ----------------------------------------------------------
     @property
@@ -194,12 +211,12 @@ class CompileResult:
         )
 
     def save(self, path: str) -> str:
-        d = os.path.dirname(path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(self.to_json(), f, indent=1, sort_keys=True)
-        return path
+        # temp-file + os.replace: an interrupted save (crash, kill -9)
+        # leaves the previous artifact intact, never a truncated file
+        from repro.compiler.fsio import atomic_write_json
+
+        return atomic_write_json(path, self.to_json(), indent=1,
+                                 sort_keys=True)
 
     @classmethod
     def load(cls, path: str) -> "CompileResult":
@@ -255,4 +272,9 @@ def new_provenance() -> Dict[str, object]:
     return {
         "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "repro_version": REPRO_VERSION,
+        # whether REPRO_QUICK budget clamping was live at compile time —
+        # the store key needs it (a clamped-budget mapping must never be
+        # served to a full-budget consumer), and only the artifact itself
+        # can carry it into a later `store put`
+        "quick": bool(os.environ.get("REPRO_QUICK")),
     }

@@ -5,11 +5,15 @@ Subcommands:
 * ``list``     — registered mappers, architectures, and the evaluation grid.
 * ``compile``  — run the pipeline on one workload; write artifact JSON.
   ``--job`` picks a (arch, mapper) pair from the grid by name;
-  ``--all-jobs`` sweeps the whole grid into ``--out-dir``.
+  ``--all-jobs`` sweeps the whole grid into ``--out-dir``; ``--store``
+  makes every compile cache-first against an artifact store.
 * ``inspect``  — summarize an artifact; ``--verify`` re-simulates the stored
   mapping against the DFG oracle **without re-running place & route**.
 * ``diff``     — compare two artifacts, or artifacts / a collect results
   cache against a golden II file (``--golden``), exit 1 on regression.
+* ``store``    — the content-addressed mapping store (serving tier):
+  ``get``/``put``/``ls``/``gc``/``warm``.  ``warm`` batch-compiles a
+  workload × job grid into the store so later compiles are pure hits.
 
 Examples::
 
@@ -18,6 +22,12 @@ Examples::
     plaid-compile compile atax -u 2 --all-jobs --out-dir artifacts/
     plaid-compile inspect artifacts/atax_u2__plaid.json --verify
     plaid-compile diff --golden tests/golden_ii_quick.json artifacts/*.json
+    plaid-compile store warm --dir /var/plaid/store --quick
+    plaid-compile compile atax -u 2 --job plaid --store /var/plaid/store
+    plaid-compile store get atax -u 2 --job plaid --dir /var/plaid/store \
+        --out served.json
+    plaid-compile store ls --dir /var/plaid/store
+    plaid-compile store gc --dir /var/plaid/store --max-bytes 50000000
 """
 from __future__ import annotations
 
@@ -25,6 +35,7 @@ import argparse
 import json
 import os
 import sys
+import time
 from typing import Dict, List, Optional
 
 from repro.compiler.artifact import (
@@ -33,12 +44,19 @@ from repro.compiler.artifact import (
     CompileResult,
 )
 from repro.compiler.pipeline import (
+    compile_key,
     compile_workload,
     job_grid,
     list_archs,
     list_mappers,
 )
 from repro.compiler.registry import MAPPERS
+from repro.compiler.store import (
+    VERIFY_POLICIES,
+    ArtifactStore,
+    CompileKey,
+    key_for,
+)
 
 
 # -- golden II diffing (shared with scripts/diff_ii.py) ----------------------
@@ -168,7 +186,9 @@ def _cmd_list(args) -> int:
     return 0
 
 
-def _compile_one(args, arch: str, mapper: str, job: Optional[str]) -> CompileResult:
+def _compile_one(args, arch: str, mapper: str, job: Optional[str],
+                 store: Optional[ArtifactStore] = None) -> CompileResult:
+    t0 = time.perf_counter()
     res = compile_workload(
         args.workload,
         arch=arch,
@@ -178,6 +198,7 @@ def _compile_one(args, arch: str, mapper: str, job: Optional[str]) -> CompileRes
         unroll=args.unroll,
         iterations=args.iterations,
         verify=args.verify,
+        store=store,
     )
     tag = job or f"{mapper}@{arch}"
     status = f"II={res.ii}" if res.ii is not None else "UNMAPPED"
@@ -185,13 +206,18 @@ def _compile_one(args, arch: str, mapper: str, job: Optional[str]) -> CompileRes
         status += f" segments={res.spatial['segments']}"
     if res.verified is not None:
         status += " verified" if res.verified else " VERIFY-FAILED"
+    if res.store_hit is not None:
+        status += " [store hit]" if res.store_hit else " [store miss]"
+    # THIS invocation's wall time: on a store hit, res.timings carries the
+    # original compile's P&R time, which is not what just happened here
     print(f"{res.key:16s} {tag:14s} {status} "
-          f"cycles={res.cycles} ({res.timings['total']:.2f}s)")
+          f"cycles={res.cycles} ({time.perf_counter() - t0:.2f}s)")
     return res
 
 
 def _cmd_compile(args) -> int:
     grid = job_grid()
+    store = ArtifactStore(args.store) if args.store else None
     if args.all_jobs:
         if args.out:
             print("--out is per-artifact; use --out-dir with --all-jobs",
@@ -200,7 +226,7 @@ def _cmd_compile(args) -> int:
         out_dir = args.out_dir or "artifacts"
         rc = 0
         for job, (arch, mapper) in grid.items():
-            res = _compile_one(args, arch, mapper, job)
+            res = _compile_one(args, arch, mapper, job, store)
             res.save(os.path.join(out_dir, f"{res.key}__{job}.json"))
             if res.verified is False:
                 rc = 1
@@ -213,7 +239,7 @@ def _cmd_compile(args) -> int:
         arch, mapper = grid[args.job]
     else:
         arch, mapper = args.arch, args.mapper
-    res = _compile_one(args, arch, mapper, args.job)
+    res = _compile_one(args, arch, mapper, args.job, store)
     if args.out:
         res.save(args.out)
     elif args.out_dir:
@@ -311,6 +337,149 @@ def _cmd_diff(args) -> int:
     return 0
 
 
+# -- store subcommands -------------------------------------------------------
+
+
+def _open_store(args) -> ArtifactStore:
+    return ArtifactStore(
+        args.dir,
+        verify=getattr(args, "verify_policy", None) or "never",
+        max_bytes=getattr(args, "max_bytes", None),
+    )
+
+
+def _key_from_args(args):
+    if getattr(args, "job", None):
+        grid = job_grid()
+        if args.job not in grid:
+            raise KeyError(f"unknown job {args.job!r}; grid jobs: "
+                           + ", ".join(grid))
+        arch, mapper = grid[args.job]
+    else:
+        arch, mapper = args.arch, args.mapper
+    return compile_key(
+        args.workload, arch=arch, mapper=mapper, seed=args.seed,
+        budget=args.budget, unroll=args.unroll,
+        iterations=getattr(args, "iterations", None),
+    )
+
+
+def _cmd_store_get(args) -> int:
+    store = _open_store(args)
+    try:
+        key = _key_from_args(args)
+    except KeyError as e:
+        print(e.args[0], file=sys.stderr)
+        return 2
+    res = store.get(key)
+    if res is None:
+        why = ("integrity/verification check failed — entry quarantined"
+               if store.counters.rejected or store.counters.verify_failures
+               else "not in store")
+        print(f"MISS  {key.describe()}  ({why})", file=sys.stderr)
+        return 1
+    print(f"HIT   {key.describe()}  II={res.ii} cycles={res.cycles} "
+          f"(served without P&R)")
+    if args.out:
+        res.save(args.out)
+        print(f"wrote {args.out}")
+    return 0
+
+
+def _cmd_store_put(args) -> int:
+    store = _open_store(args)
+    rc = 0
+    for path in args.artifacts:
+        try:
+            res = CompileResult.load(path)
+        # structurally mangled JSON surfaces as KeyError/AttributeError/
+        # TypeError from from_json, not just OSError/ValueError — any of
+        # them means "skip this file, keep going"
+        except Exception as e:
+            print(f"{path}: not a loadable artifact "
+                  f"({type(e).__name__}: {e})", file=sys.stderr)
+            rc = 1
+            continue
+        digest = store.put(res, key=key_for(res))
+        print(f"{path}: stored as {digest[:16]}… ({key_for(res).describe()})")
+    return rc
+
+
+def _cmd_store_ls(args) -> int:
+    store = _open_store(args)
+    rows = store.ls()
+    if not rows:
+        print("store is empty")
+        return 0
+    header = ("key", "ii", "cycles", "size", "hits", "verified")
+    table = [header]
+    for r in rows:
+        tag = CompileKey.from_json(r["key"]).describe()
+        table.append((tag, str(r.get("ii")), str(r.get("cycles")),
+                      str(r.get("size")), str(r.get("hits", 0)),
+                      str(bool(r.get("verified")))))
+    widths = [max(len(row[i]) for row in table) for i in range(len(header))]
+    for i, row in enumerate(table):
+        print("  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip())
+        if i == 0:
+            print("  ".join("-" * w for w in widths))
+    print(f"{len(rows)} entr{'y' if len(rows) == 1 else 'ies'}, "
+          f"{store.total_bytes()} bytes")
+    return 0
+
+
+def _cmd_store_gc(args) -> int:
+    store = _open_store(args)
+    evicted = store.gc(max_bytes=args.max_bytes)
+    print(f"gc: evicted {evicted} entr{'y' if evicted == 1 else 'ies'}; "
+          f"{len(store.ls())} left, {store.total_bytes()} bytes")
+    return 0
+
+
+def _cmd_store_warm(args) -> int:
+    """Batch-compile a workload × job grid into the store.  Already-stored
+    cells are hits (no P&R), so re-warming after adding a mapper or
+    workload only compiles the new cells."""
+    from repro.core.workloads import TABLE2, quick_workloads, workloads_by_keys
+
+    store = _open_store(args)
+    table = quick_workloads() if args.quick else TABLE2
+    if args.workloads:
+        try:
+            table = workloads_by_keys(table, args.workloads.split(","))
+        except KeyError as e:
+            print(str(e), file=sys.stderr)
+            return 2
+    grid = job_grid()
+    if args.job:
+        if args.job not in grid:
+            print(f"unknown job {args.job!r}; grid jobs: " + ", ".join(grid),
+                  file=sys.stderr)
+            return 2
+        grid = {args.job: grid[args.job]}
+    for w in table:
+        for job, (arch, mapper) in grid.items():
+            res = compile_workload(w, arch=arch, mapper=mapper,
+                                   seed=args.seed, store=store)
+            state = "hit " if res.store_hit else "warm"
+            print(f"{state}  {w.name}_u{w.unroll:<3} {job:14s} II={res.ii} "
+                  f"cycles={res.cycles}", flush=True)
+    c = store.counters
+    print(f"warm done: {c.puts} compiled+stored, {c.hits} already present, "
+          f"{c.evictions} evicted")
+    return 0
+
+
+def _cmd_store(args) -> int:
+    return {
+        "get": _cmd_store_get,
+        "put": _cmd_store_put,
+        "ls": _cmd_store_ls,
+        "gc": _cmd_store_gc,
+        "warm": _cmd_store_warm,
+    }[args.store_cmd](args)
+
+
 def _is_artifact(path: str) -> bool:
     try:
         with open(path) as f:
@@ -347,6 +516,9 @@ def build_parser() -> argparse.ArgumentParser:
     c.add_argument("--out", default=None, help="artifact output path")
     c.add_argument("--out-dir", default=None,
                    help="directory for artifacts (name derived from key/job)")
+    c.add_argument("--store", default=None, metavar="DIR",
+                   help="artifact store: serve a cached mapping without "
+                        "P&R, insert on miss")
 
     i = sub.add_parser("inspect", help="summarize (and optionally re-verify)")
     i.add_argument("artifacts", nargs="+")
@@ -359,6 +531,56 @@ def build_parser() -> argparse.ArgumentParser:
                    help="artifacts, artifact dirs, or a collect results.json")
     d.add_argument("--golden", default=None, help="golden II JSON file")
 
+    s = sub.add_parser("store",
+                       help="content-addressed mapping store (serving tier)")
+    ssub = s.add_subparsers(dest="store_cmd", required=True)
+
+    def _dir_arg(p):
+        p.add_argument("--dir", default="artifacts/store",
+                       help="store root directory (default artifacts/store)")
+
+    g = ssub.add_parser("get", help="fetch one mapping (no P&R)")
+    _dir_arg(g)
+    g.add_argument("workload")
+    g.add_argument("-u", "--unroll", type=int, default=None)
+    g.add_argument("--arch", default="plaid2x2")
+    g.add_argument("--mapper", default="hierarchical")
+    g.add_argument("--job", default=None,
+                   help="pick (arch, mapper) from the evaluation grid")
+    g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--budget", type=int, default=None)
+    g.add_argument("--iterations", type=int, default=None,
+                   help="loop trip count the artifact was compiled with "
+                        "(part of the key; default: workload default)")
+    g.add_argument("--verify-policy", choices=VERIFY_POLICIES,
+                   default="never",
+                   help="re-simulate the served mapping: never/first/always")
+    g.add_argument("--out", default=None, help="write the artifact here")
+
+    p = ssub.add_parser("put", help="insert existing artifact files")
+    _dir_arg(p)
+    p.add_argument("artifacts", nargs="+")
+
+    ls = ssub.add_parser("ls", help="list stored entries (MRU first)")
+    _dir_arg(ls)
+
+    gc = ssub.add_parser("gc", help="LRU-evict down to --max-bytes; drop "
+                                    "corrupt entries")
+    _dir_arg(gc)
+    gc.add_argument("--max-bytes", type=int, default=None,
+                    help="size cap (default: keep everything, still drops "
+                         "corrupt entries)")
+
+    wm = ssub.add_parser("warm", help="batch-compile a workload grid into "
+                                      "the store")
+    _dir_arg(wm)
+    wm.add_argument("--quick", action="store_true",
+                    help="quick_workloads() slice instead of full TABLE2")
+    wm.add_argument("--workloads", default=None,
+                    help="comma-separated <name>_u<unroll> keys")
+    wm.add_argument("--job", default=None, help="restrict to one grid job")
+    wm.add_argument("--seed", type=int, default=0)
+
     return ap
 
 
@@ -369,6 +591,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         "compile": _cmd_compile,
         "inspect": _cmd_inspect,
         "diff": _cmd_diff,
+        "store": _cmd_store,
     }[args.cmd](args)
 
 

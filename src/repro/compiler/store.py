@@ -1,0 +1,573 @@
+"""Content-addressed, on-disk store of compile artifacts — the serving tier.
+
+The unit of caching is a :class:`~repro.compiler.artifact.CompileResult`
+keyed by :class:`CompileKey` — the canonical (workload, arch, mapper, seed,
+budget) tuple that fully determines a deterministic compile.  A warm store
+hands out verified mappings **without re-running place & route**:
+``compile(..., store=...)`` consults the store first, and
+``repro.core.collect --store`` runs the whole evaluation grid cache-first.
+
+Layout (all writes atomic: temp file + ``os.replace``)::
+
+    <root>/
+      index.json            # digest -> {key, digest, size, ii, cycles, ...}
+      index.json.lock       # flock sidecar for index read-modify-write
+      entries/<keydigest>.json
+        {"schema": "repro.compiler/store-entry@1",
+         "key":     CompileKey.to_json(),
+         "digest":  sha256(canonical artifact JSON),   # integrity digest
+         "artifact": CompileResult.to_json()}
+
+Durability / correctness properties:
+
+* **Content addressing** — the entry filename is the SHA-256 of the
+  canonical key JSON; two processes compiling the same cell converge on
+  the same path and the atomic replace makes the race benign (the
+  artifacts are bit-identical by the determinism contract).
+* **Integrity** — every entry carries a SHA-256 digest of its artifact
+  payload, recomputed and checked on load.  A tampered or bit-rotted
+  entry raises :class:`StoreIntegrityError` internally; ``get`` treats it
+  as a miss, quarantines the file (``*.corrupt``), and recompiles.
+* **Re-verification policy** — ``verify="never"|"first"|"always"``:
+  ``first`` replays the stored mapping on the cycle-accurate simulator
+  the first time an entry is served (then remembers it in the index);
+  ``always`` re-verifies every hit.  A mapping that fails verification is
+  quarantined, never served.
+* **Self-healing index** — ``index.json`` is a cache of the entry files,
+  not the source of truth.  If it is missing, unparseable, or disagrees
+  with the directory listing (e.g. a writer died between entry and index
+  update), it is rebuilt by scanning the entries.
+* **LRU eviction** — with ``max_bytes`` set, least-recently-served
+  entries are evicted on ``put``/``gc`` until the payload fits.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.compiler.artifact import REPRO_VERSION, CompileResult
+from repro.compiler.fsio import (
+    atomic_write_json,
+    locked,
+    quarantine,
+    sha256_of_json,
+)
+
+ENTRY_SCHEMA = "repro.compiler/store-entry@1"
+INDEX_SCHEMA = "repro.compiler/store-index@1"
+VERIFY_POLICIES = ("never", "first", "always")
+
+
+class StoreIntegrityError(ValueError):
+    """A store entry failed its digest or verification check."""
+
+
+@dataclass(frozen=True)
+class CompileKey:
+    """Canonical identity of one deterministic compile.
+
+    ``workload`` is the artifact's workload-info dict (``{"name",
+    "unroll", "iterations", "domain"}`` for TABLE2 workloads; raw DFG
+    inputs carry ``{"dfg_name", "iterations", "dfg_sha256"}`` so two
+    different graphs under one name cannot collide).  ``arch`` and
+    ``mapper`` are the **registered canonical** names — aliases resolve
+    to the same key.
+
+    Two extra components keep a *persistent* store honest:
+
+    * ``toolchain`` — :data:`~repro.compiler.artifact.REPRO_VERSION`;
+      bumping it (the discipline for any mapper-behavior change) silently
+      namespaces all future keys, so a long-lived store never serves a
+      mapping produced by an older algorithm as if it were current.
+    * ``quick`` — whether ``REPRO_QUICK`` budget clamping was active at
+      compile time; a quick-budget mapping must never be served to a
+      full-budget consumer (its II can be worse than golden).
+    """
+
+    workload: tuple  # sorted (k, v) pairs; hashable
+    arch: str
+    mapper: str
+    seed: int
+    budget: Optional[int] = None
+    toolchain: str = REPRO_VERSION
+    quick: bool = False
+
+    @classmethod
+    def make(cls, workload: Dict[str, object], arch: str, mapper: str,
+             seed: int, budget: Optional[int] = None,
+             toolchain: Optional[str] = None,
+             quick: Optional[bool] = None) -> "CompileKey":
+        if quick is None:
+            quick = bool(os.environ.get("REPRO_QUICK"))
+        return cls(
+            workload=tuple(sorted(workload.items())),
+            arch=arch, mapper=mapper, seed=int(seed),
+            budget=None if budget is None else int(budget),
+            toolchain=REPRO_VERSION if toolchain is None else toolchain,
+            quick=bool(quick),
+        )
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "workload": dict(self.workload),
+            "arch": self.arch,
+            "mapper": self.mapper,
+            "seed": self.seed,
+            "budget": self.budget,
+            "toolchain": self.toolchain,
+            "quick": self.quick,
+        }
+
+    @classmethod
+    def from_json(cls, data: Dict[str, object]) -> "CompileKey":
+        return cls.make(data["workload"], data["arch"], data["mapper"],
+                        data["seed"], data.get("budget"),
+                        toolchain=data.get("toolchain", REPRO_VERSION),
+                        quick=data.get("quick", False))
+
+    @property
+    def digest(self) -> str:
+        """Content address: SHA-256 of the canonical key JSON."""
+        return sha256_of_json(self.to_json())
+
+    def describe(self) -> str:
+        w = dict(self.workload)
+        wname = (f"{w['name']}_u{w['unroll']}" if "name" in w
+                 else str(w.get("dfg_name", "dfg")))
+        tag = f"{wname} {self.mapper}@{self.arch} seed={self.seed}"
+        if self.budget is not None:
+            tag += f" budget={self.budget}"
+        if self.quick:
+            tag += " [quick]"
+        return tag
+
+
+def key_for(result: CompileResult) -> CompileKey:
+    """Derive the store key of an existing artifact (``store put`` path).
+
+    Everything comes from the artifact itself, never the current process:
+    workload info (raw-DFG artifacts record a ``dfg_sha256`` of the
+    *input* graph at compile time), and the staleness guards from
+    provenance — ``repro_version`` as the toolchain namespace and the
+    recorded ``quick`` regime.  Putting an old or quick-clamped artifact
+    from a new/full-budget shell therefore cannot file it under a
+    namespace its mapping does not belong to.  Artifacts predating these
+    fields degrade to name-only workloads / full-budget keys.
+    """
+    prov = result.provenance or {}
+    return CompileKey.make(dict(result.workload), result.arch,
+                           result.mapper, result.seed, result.budget,
+                           toolchain=prov.get("repro_version",
+                                              REPRO_VERSION),
+                           quick=bool(prov.get("quick", False)))
+
+
+@dataclass
+class StoreCounters:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+    evictions: int = 0
+    rejected: int = 0          # digest mismatch / mangled entry
+    verify_runs: int = 0
+    verify_failures: int = 0
+
+    def to_json(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+@dataclass
+class ArtifactStore:
+    """See module docstring.  ``root`` is created lazily on first write."""
+
+    root: str
+    verify: str = "never"
+    max_bytes: Optional[int] = None
+    counters: StoreCounters = field(default_factory=StoreCounters)
+
+    def __post_init__(self):
+        if self.verify not in VERIFY_POLICIES:
+            raise ValueError(
+                f"verify policy {self.verify!r} not in {VERIFY_POLICIES}")
+
+    # -- paths -------------------------------------------------------------
+    @property
+    def entries_dir(self) -> str:
+        return os.path.join(self.root, "entries")
+
+    @property
+    def index_path(self) -> str:
+        return os.path.join(self.root, "index.json")
+
+    def entry_path(self, digest: str) -> str:
+        return os.path.join(self.entries_dir, digest + ".json")
+
+    # -- index -------------------------------------------------------------
+    def _listed_digests(self) -> List[str]:
+        try:
+            names = os.listdir(self.entries_dir)
+        except FileNotFoundError:
+            return []
+        # skip hidden names: in-flight ".tmp-*" atomic-write files must not
+        # be scanned (or quarantined!) as entries
+        return sorted(n[:-5] for n in names
+                      if n.endswith(".json") and not n.startswith("."))
+
+    def _read_index(self) -> Optional[Dict[str, Dict]]:
+        """The raw index, or ``None`` when missing/unparseable/stale."""
+        import json
+
+        try:
+            with open(self.index_path) as f:
+                data = json.load(f)
+        except FileNotFoundError:
+            data = None
+        except ValueError:
+            # parse failure = corruption; transient I/O errors propagate
+            # (quarantining an intact index on an EIO blip would only cost
+            # a rebuild, but the same policy on entries destroys data)
+            quarantine(self.index_path)
+            data = None
+        if data is None or data.get("schema") != INDEX_SCHEMA:
+            return None
+        entries = data.get("entries")
+        if not isinstance(entries, dict):
+            return None
+        if sorted(entries) != self._listed_digests():
+            return None  # stale: writer died between entry and index update
+        for digest, row in entries.items():
+            if not isinstance(row, dict):
+                return None
+            try:
+                st = os.stat(self.entry_path(digest))
+            except FileNotFoundError:
+                return None
+            if (row.get("size") != st.st_size
+                    or row.get("mtime") != st.st_mtime):
+                # the entry file changed under its row (same-key put that
+                # died before the index update): stale — a rebuild re-reads
+                # it and resets `verified` if the content digest moved
+                return None
+        return entries
+
+    def index(self) -> Dict[str, Dict]:
+        """Current index entries, rebuilding from the entry files when the
+        stored index is missing, corrupt, or out of sync with them."""
+        entries = self._read_index()
+        if entries is None:
+            entries = self.rebuild_index()
+        return entries
+
+    def _read_raw_rows(self) -> Dict[str, Dict]:
+        """Best-effort rows from the stored index, staleness ignored —
+        carries hits / last_used / verified bookkeeping across rebuilds."""
+        import json
+
+        try:
+            with open(self.index_path) as f:
+                data = json.load(f)
+        except (FileNotFoundError, ValueError, OSError):
+            return {}
+        entries = data.get("entries") if isinstance(data, dict) else None
+        return entries if isinstance(entries, dict) else {}
+
+    def _scan_entries(self) -> Dict[str, Dict]:
+        """Build index rows by scanning + integrity-checking every entry
+        file (quarantining unreadable/tampered ones).  Caller holds the
+        index lock."""
+        prev_rows = self._read_raw_rows()
+        entries: Dict[str, Dict] = {}
+        for digest in self._listed_digests():
+            path = self.entry_path(digest)
+            try:
+                entry = self._load_entry_file(path, digest)
+            except StoreIntegrityError:
+                self.counters.rejected += 1
+                quarantine(path)
+                continue
+            entries[digest] = self._index_row(entry, path,
+                                              prev=prev_rows.get(digest))
+        return entries
+
+    def _reconcile_rows(self) -> Dict[str, Dict]:
+        """Index rows for the current entry listing, reusing rows the
+        stored index already has and integrity-checking only files it
+        does not know.  This is the hot *write* path (every put makes the
+        index momentarily trail the directory by exactly its own new
+        entry) — a full digest rescan here would make warming a store
+        O(N²) in entry reads.  Full-trust rescans stay where they belong:
+        :meth:`rebuild_index` (read-path self-heal, ``gc``)."""
+        raw = self._read_raw_rows()
+        entries: Dict[str, Dict] = {}
+        for digest in self._listed_digests():
+            path = self.entry_path(digest)
+            row = raw.get(digest)
+            if isinstance(row, dict) and row.get("digest"):
+                try:
+                    st = os.stat(path)
+                except FileNotFoundError:
+                    continue  # raced away; next update drops it anyway
+                if (row.get("size") == st.st_size
+                        and row.get("mtime") == st.st_mtime):
+                    entries[digest] = row
+                    continue
+                # the file changed under the row (e.g. a same-key put that
+                # died before its index update): re-read it; _index_row
+                # resets `verified` when the content digest differs
+            try:
+                entry = self._load_entry_file(path, digest)
+            except StoreIntegrityError:
+                self.counters.rejected += 1
+                quarantine(path)
+                continue
+            entries[digest] = self._index_row(
+                entry, path, prev=row if isinstance(row, dict) else None)
+        return entries
+
+    def rebuild_index(self) -> Dict[str, Dict]:
+        """Re-scan ``entries/`` and rewrite ``index.json`` from scratch.
+        Unreadable entry files are quarantined, not trusted; LRU/verified
+        bookkeeping survives via whatever old index rows still match."""
+        with locked(self.index_path):
+            entries = self._scan_entries()
+            self._write_index(entries)
+        return entries
+
+    def _index_row(self, entry: Dict, path: str,
+                   prev: Optional[Dict] = None) -> Dict:
+        art = entry["artifact"]
+        # a verified verdict belongs to one exact payload: inherit it only
+        # while the content digest is unchanged
+        same_content = bool(prev and prev.get("digest") == entry["digest"])
+        st = os.stat(path)
+        row = {
+            "key": entry["key"],
+            "digest": entry["digest"],
+            "size": st.st_size,
+            "mtime": st.st_mtime,
+            "ii": art.get("ii"),
+            "cycles": art.get("cycles"),
+            "verified": bool(same_content and prev.get("verified")),
+            "hits": int(prev.get("hits", 0)) if prev else 0,
+            "created": (prev or {}).get("created", time.time()),
+            "last_used": (prev or {}).get("last_used", time.time()),
+        }
+        return row
+
+    def _write_index(self, entries: Dict[str, Dict]):
+        atomic_write_json(self.index_path,
+                          {"schema": INDEX_SCHEMA, "entries": entries})
+
+    def _update_index(self, mutate) -> Dict[str, Dict]:
+        """Locked read-modify-write of the index (rebuilds first if stale)."""
+        with locked(self.index_path):
+            entries = self._read_index()
+            if entries is None:
+                entries = self._reconcile_rows()  # already under the lock
+            mutate(entries)
+            self._write_index(entries)
+        return entries
+
+    # -- entries -----------------------------------------------------------
+    def _load_entry_file(self, path: str, digest: str) -> Dict:
+        """Parse + integrity-check one entry file; raises
+        :class:`StoreIntegrityError` on any mismatch."""
+        import json
+
+        try:
+            with open(path) as f:
+                entry = json.load(f)
+        except ValueError as e:
+            # only a parse failure is evidence of corruption; OSErrors
+            # other than FileNotFoundError (EACCES, EIO) propagate so a
+            # transient blip cannot get a valid entry quarantined
+            raise StoreIntegrityError(f"{path}: unreadable entry ({e})")
+        if not isinstance(entry, dict) or entry.get("schema") != ENTRY_SCHEMA:
+            raise StoreIntegrityError(
+                f"{path}: not a {ENTRY_SCHEMA} store entry")
+        for fld in ("key", "digest", "artifact"):
+            if fld not in entry:
+                raise StoreIntegrityError(f"{path}: missing {fld!r}")
+        want = entry["digest"]
+        got = sha256_of_json(entry["artifact"])
+        if got != want:
+            raise StoreIntegrityError(
+                f"{path}: artifact digest mismatch "
+                f"(stored {want[:12]}…, computed {got[:12]}…)")
+        key_digest = CompileKey.from_json(entry["key"]).digest
+        if key_digest != digest:
+            raise StoreIntegrityError(
+                f"{path}: entry misfiled (key digest {key_digest[:12]}… "
+                f"!= filename {digest[:12]}…)")
+        return entry
+
+    # -- public API --------------------------------------------------------
+    def contains(self, key: CompileKey) -> bool:
+        return os.path.exists(self.entry_path(key.digest))
+
+    def put(self, result: CompileResult,
+            key: Optional[CompileKey] = None) -> str:
+        """Insert an artifact; returns its key digest.  Atomic, lock-held
+        index update, then LRU eviction if the store exceeds ``max_bytes``
+        (the just-inserted entry is never evicted)."""
+        import json
+
+        key = key or key_for(result)
+        digest = key.digest
+        # digest the payload AS IT READS BACK from disk (JSON stringifies
+        # int dict keys), otherwise every stored digest would mismatch on
+        # the first load
+        art_json = json.loads(json.dumps(result.to_json()))
+        entry = {
+            "schema": ENTRY_SCHEMA,
+            "key": key.to_json(),
+            "digest": sha256_of_json(art_json),
+            "artifact": art_json,
+        }
+        path = self.entry_path(digest)
+        atomic_write_json(path, entry)
+
+        def mutate(entries):
+            row = self._index_row(entry, path, prev=entries.get(digest))
+            if result.verified is True:
+                # the producer already proved this mapping against the
+                # oracle; 'first' consumers need not re-run the simulator
+                row["verified"] = True
+            entries[digest] = row
+            self._evict_over_cap(entries, protect=digest)
+
+        self._update_index(mutate)
+        self.counters.puts += 1
+        return digest
+
+    def get(self, key: CompileKey) -> Optional[CompileResult]:
+        """Cache lookup.  Returns the stored artifact (integrity-checked,
+        re-verified per policy) or ``None``; corrupt / unverifiable entries
+        are quarantined and reported as misses so callers fall back to a
+        fresh compile."""
+        digest = key.digest
+        path = self.entry_path(digest)
+        try:
+            entry = self._load_entry_file(path, digest)
+        except FileNotFoundError:
+            self.counters.misses += 1
+            return None
+        except StoreIntegrityError:
+            self.counters.rejected += 1
+            self.counters.misses += 1
+            quarantine(path)
+            self._update_index(lambda entries: entries.pop(digest, None))
+            return None
+
+        result = CompileResult.from_json(entry["artifact"])
+        verified_now = False
+        if result.mappings and self.verify != "never" and (
+            self.verify == "always" or not self.is_verified(key)
+        ):
+            self.counters.verify_runs += 1
+            try:
+                result.simulate(iterations=3)
+                verified_now = True
+            except Exception:
+                self.counters.verify_failures += 1
+                self.counters.misses += 1
+                quarantine(path, reason="unverified")
+                self._update_index(lambda entries: entries.pop(digest, None))
+                return None
+
+        def touch(entries):
+            row = entries.get(digest)
+            if row is not None:
+                row["last_used"] = time.time()
+                row["hits"] = int(row.get("hits", 0)) + 1
+                if verified_now:
+                    row["verified"] = True
+
+        self._update_index(touch)
+        self.counters.hits += 1
+        return result
+
+    def is_verified(self, key: CompileKey) -> bool:
+        """Whether the index records a positive verification verdict for
+        this entry (set by verify policies, ``mark_verified``, or a
+        ``put`` of an already-verified artifact)."""
+        return bool(self.index().get(key.digest, {}).get("verified"))
+
+    def mark_verified(self, key: CompileKey) -> None:
+        """Persist an externally-obtained verification verdict (e.g. the
+        pipeline's hit-path re-simulation) so ``verify="first"`` consumers
+        skip the simulator for this entry."""
+        digest = key.digest
+
+        def mut(entries):
+            row = entries.get(digest)
+            if row is not None:
+                row["verified"] = True
+
+        self._update_index(mut)
+
+    def discard(self, key: CompileKey, reason: str = "unverified") -> None:
+        """Quarantine an entry and drop it from the index — used when a
+        consumer (e.g. ``compile(verify=True)``) proves a served mapping
+        wrong; the next lookup misses and recompiles."""
+        digest = key.digest
+        quarantine(self.entry_path(digest), reason=reason)
+        self._update_index(lambda entries: entries.pop(digest, None))
+
+    def ls(self) -> List[Dict]:
+        """Index rows sorted most-recently-used first."""
+        rows = []
+        for digest, row in self.index().items():
+            rows.append(dict(row, key_digest=digest))
+        rows.sort(key=lambda r: -r.get("last_used", 0.0))
+        return rows
+
+    def total_bytes(self) -> int:
+        return sum(int(r.get("size", 0)) for r in self.index().values())
+
+    def _evict_over_cap(self, entries: Dict[str, Dict],
+                        protect: Optional[str] = None,
+                        max_bytes: Optional[int] = None):
+        cap = self.max_bytes if max_bytes is None else max_bytes
+        if cap is None:
+            return
+        total = sum(int(r.get("size", 0)) for r in entries.values())
+        victims = sorted(
+            (d for d in entries if d != protect),
+            key=lambda d: entries[d].get("last_used", 0.0),
+        )
+        for digest in victims:
+            if total <= cap:
+                break
+            total -= int(entries[digest].get("size", 0))
+            del entries[digest]
+            try:
+                os.unlink(self.entry_path(digest))
+            except FileNotFoundError:
+                pass
+            self.counters.evictions += 1
+
+    def gc(self, max_bytes: Optional[int] = None) -> int:
+        """Evict LRU entries until the store fits ``max_bytes`` (argument
+        overrides the store's configured cap), after an unconditional
+        integrity rescan of every entry file — in-place-tampered entries
+        (whose filenames still match the index, so no staleness rebuild
+        would trigger) are quarantined here rather than lingering until
+        their next ``get``.  Returns the number of entries evicted."""
+        self.rebuild_index()  # full digest scan; quarantines corrupt entries
+        before = self.counters.evictions
+        self._update_index(
+            lambda entries: self._evict_over_cap(entries,
+                                                 max_bytes=max_bytes))
+        return self.counters.evictions - before
+
+
+def open_store(store, verify: Optional[str] = None,
+               max_bytes: Optional[int] = None) -> "ArtifactStore":
+    """Coerce a path or an :class:`ArtifactStore` into a store instance."""
+    if isinstance(store, ArtifactStore):
+        return store
+    return ArtifactStore(str(store), verify=verify or "never",
+                         max_bytes=max_bytes)

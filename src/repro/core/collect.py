@@ -23,8 +23,13 @@ import json
 import os
 import time
 from multiprocessing import Pool
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
+from repro.compiler.fsio import (
+    atomic_write_json,
+    load_json_or_quarantine,
+    locked,
+)
 from repro.compiler.pipeline import compile_workload, job_grid
 from repro.compiler.registry import MAPPERS
 from repro.core.motifs import generate_motifs, motif_cover_stats, validate_cover
@@ -33,6 +38,7 @@ from repro.core.workloads import (
     build_workload,
     quick_workloads,
     workload_by_name,
+    workloads_by_keys,
 )
 
 BENCH_PATH = "BENCH_mapper.json"
@@ -62,15 +68,23 @@ def mapper_jobs() -> Dict[str, Tuple[str, str]]:
     return {job: pair for job, pair in job_grid().items() if job not in sp}
 
 
+class ResultsSchemaError(RuntimeError):
+    """The registered job grid cannot be represented in the results.json
+    schema (e.g. a second spatial-style mapper)."""
+
+
 def job_names():
     sp = list(_spatial_jobs())
     # the results.json schema has exactly one dedicated "spatial" slot
     # (paper Figs. 12/15); fail loudly rather than misfile a second
-    # spatial-style mapper's cells under the modulo-mapper columns
-    assert sp == ["spatial"], (
-        f"results schema supports exactly one spatial job named 'spatial'; "
-        f"registered spatial-style jobs: {sp}"
-    )
+    # spatial-style mapper's cells under the modulo-mapper columns.  A
+    # real exception, not an assert: asserts vanish under `python -O`,
+    # which would silently misfile those cells.
+    if sp != ["spatial"]:
+        raise ResultsSchemaError(
+            f"results schema supports exactly one spatial job named "
+            f"'spatial'; registered spatial-style jobs: {sp}"
+        )
     return ["motifs", "spatial"] + list(mapper_jobs())
 
 
@@ -81,10 +95,22 @@ JOB_NAMES = job_names()
 VERIFY_JOBS = ("plaid", "st")  # functional verification of headline mappings
 
 
-def run_job(task: Tuple[str, int, str]):
+def run_job(task: Tuple[str, int, str, Optional[str]]):
     """One grid cell: compile one workload with one registered mapper/arch
-    pair (or run the motif analysis).  Returns a small picklable payload."""
-    wname, unroll, job = task
+    pair (or run the motif analysis).  Returns a small picklable payload.
+
+    A non-``None`` store path makes every compile cache-first: a warm
+    store serves the mapping without place & route, and the payload's
+    ``store_hit`` records which way the cell went (the motif analysis is
+    pure graph analytics — no P&R to cache — and carries no flag).
+    """
+    wname, unroll, job = task[0], task[1], task[2]
+    store_path = task[3] if len(task) > 3 else None
+    store = None
+    if store_path is not None:
+        from repro.compiler.store import ArtifactStore
+
+        store = ArtifactStore(store_path)
     w = workload_by_name(wname, unroll)
     t0 = time.time()
     out: Dict[str, object] = {}
@@ -97,14 +123,15 @@ def run_job(task: Tuple[str, int, str]):
         out["motifs_strict_covered"] = motif_cover_stats(g, strict)["covered"]
     elif job in _spatial_jobs():
         arch_name, mapper_name = job_grid()[job]
-        res = compile_workload(w, arch=arch_name, mapper=mapper_name, seed=0)
+        res = compile_workload(w, arch=arch_name, mapper=mapper_name, seed=0,
+                               store=store)
         out["spatial"] = res.spatial
         out["cycles"] = res.cycles
     else:
         arch_name, mapper_name = mapper_jobs()[job]
         res = compile_workload(
             w, arch=arch_name, mapper=mapper_name, seed=0,
-            verify=job in VERIFY_JOBS,
+            verify=job in VERIFY_JOBS, store=store,
         )
         out["ii"] = res.ii
         out["cycles"] = res.cycles
@@ -112,6 +139,8 @@ def run_job(task: Tuple[str, int, str]):
             out["route_cache"] = res.route_cache
         if job in VERIFY_JOBS:
             out["verified"] = bool(res.verified)
+    if store is not None and job != "motifs":
+        out["store_hit"] = bool(res.store_hit)
     out["wall_s"] = time.time() - t0
     return f"{w.name}_u{w.unroll}", job, out
 
@@ -146,30 +175,56 @@ def _finalize(w, parts: Dict[str, Dict], grid_jobs) -> Dict:
             "misses": misses,
             "hit_rate": round(hits / (hits + misses), 4),
         }
+    st_hits = sum(1 for p in parts.values() if p.get("store_hit") is True)
+    st_miss = sum(1 for p in parts.values() if p.get("store_hit") is False)
+    if st_hits or st_miss:
+        rec["store"] = {"hits": st_hits, "misses": st_miss}
     return rec
 
 
 def _append_bench(bench_path: str, entry: Dict):
-    data = {"runs": []}
-    if os.path.exists(bench_path):
-        with open(bench_path) as f:
-            data = json.load(f)
-    data.setdefault("runs", []).append(entry)
-    with open(bench_path, "w") as f:
-        json.dump(data, f, indent=1)
+    """Append one run entry to the bench trajectory.
+
+    Concurrent appenders (a ``collect`` run racing ``scripts/ci.sh``'s
+    perf smoke, or two collects) serialize on an exclusive ``flock`` so
+    the read-modify-write cannot lose entries; the write itself is atomic
+    (temp file + ``os.replace``), and a truncated/corrupt trajectory file
+    is quarantined and restarted instead of raising ``JSONDecodeError``
+    after a full collect run.
+    """
+    with locked(bench_path):
+        data = load_json_or_quarantine(bench_path, {"runs": []})
+        if not isinstance(data, dict):
+            data = {"runs": []}
+        data.setdefault("runs", []).append(entry)
+        atomic_write_json(bench_path, data, indent=1)
 
 
 def collect(out_path: str, quick: bool = False, jobs: int = 0,
-            bench_path: str = BENCH_PATH, bench_note: str = ""):
-    results = {}
-    if os.path.exists(out_path):  # resume
-        with open(out_path) as f:
-            results = json.load(f)
+            bench_path: str = BENCH_PATH, bench_note: str = "",
+            store_path: Optional[str] = None,
+            workloads: Optional[List[str]] = None):
+    """Run the (workload × job) grid; see module docstring.
+
+    ``store_path`` routes every compile through the artifact store at that
+    path (cache-first: a warm store serves the whole grid with **zero**
+    place & route; hit/miss counts land in each record and in the bench
+    entry).  ``workloads`` restricts the sweep to the named
+    ``<name>_u<unroll>`` keys — e.g. ``["atax_u2"]`` for the CI
+    store-roundtrip check.
+    """
+    # resume: a torn cache from an interrupted (pre-atomic-write) run is
+    # quarantined and the sweep restarts, instead of dying on JSONDecodeError
+    results = load_json_or_quarantine(out_path, {})
+    if not isinstance(results, dict):
+        results = {}
     table = quick_workloads() if quick else TABLE2
+    if workloads is not None:
+        table = workloads_by_keys(table, workloads)
     grid_jobs = mapper_jobs()  # call-time: sweeps late registrations too
     names = job_names()
     pending = [w for w in table if f"{w.name}_u{w.unroll}" not in results]
-    tasks = [(w.name, w.unroll, j) for w in pending for j in names]
+    tasks = [(w.name, w.unroll, j, store_path) for w in pending for j in names]
     by_key = {f"{w.name}_u{w.unroll}": w for w in pending}
     n_jobs = max(1, jobs or os.cpu_count() or 1)
     t_start = time.time()
@@ -183,16 +238,20 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
                 continue
             rec = _finalize(by_key[key], partial.pop(key), grid_jobs)
             results[key] = rec
+            store_note = ""
+            if "store" in rec:
+                store_note = (f" store={rec['store']['hits']}h/"
+                              f"{rec['store']['misses']}m")
             print(
                 f"{key:14s} plaid={rec['ii']['plaid']} st={rec['ii']['st']} "
                 f"spatial_segs={rec['spatial']['segments']} "
-                f"verified={rec['verified']} ({rec['wall_s']}s cpu)",
+                f"verified={rec['verified']} ({rec['wall_s']}s cpu)"
+                f"{store_note}",
                 flush=True,
             )
-            if os.path.dirname(out_path):
-                os.makedirs(os.path.dirname(out_path), exist_ok=True)
-            with open(out_path, "w") as f:
-                json.dump(results, f, indent=1)
+            # atomic rewrite: a crash mid-dump must not corrupt the
+            # resume cache the next run would load
+            atomic_write_json(out_path, results, indent=1)
 
     if tasks:
         if n_jobs > 1:
@@ -213,6 +272,18 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
         }
         if hits or misses:
             entry["route_cache_hit_rate"] = round(hits / (hits + misses), 4)
+        if store_path is not None:
+            st_hits = sum(c.get("store", {}).get("hits", 0) for c in cells)
+            st_miss = sum(c.get("store", {}).get("misses", 0) for c in cells)
+            entry["store"] = {
+                "path": store_path,
+                "hits": st_hits,
+                "misses": st_miss,
+                "hit_rate": (round(st_hits / (st_hits + st_miss), 4)
+                             if st_hits + st_miss else None),
+            }
+            print(f"store: {st_hits} hit(s), {st_miss} miss(es) "
+                  f"({store_path})", flush=True)
         if bench_note:
             entry["note"] = bench_note
         _append_bench(bench_path, entry)
@@ -229,6 +300,13 @@ if __name__ == "__main__":
                     help="mapper-speed trajectory JSON")
     ap.add_argument("--bench-note", default="",
                     help="tag recorded with the bench entry (e.g. CI smoke)")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="artifact store directory: serve cached mappings "
+                         "without P&R, insert fresh compiles")
+    ap.add_argument("--workloads", default=None,
+                    help="comma-separated <name>_u<unroll> keys to restrict "
+                         "the sweep (e.g. atax_u2)")
     args = ap.parse_args()
     collect(args.out, args.quick, jobs=args.jobs, bench_path=args.bench_out,
-            bench_note=args.bench_note)
+            bench_note=args.bench_note, store_path=args.store,
+            workloads=(args.workloads.split(",") if args.workloads else None))

@@ -193,3 +193,19 @@ def workload_by_name(name: str, unroll: int) -> Workload:
         if w.name == name and w.unroll == unroll:
             return w
     raise KeyError((name, unroll))
+
+
+def workloads_by_keys(table: List[Workload],
+                      keys: List[str]) -> List[Workload]:
+    """Subset of ``table`` matching ``<name>_u<unroll>`` keys; unknown keys
+    raise ``KeyError`` naming every valid one (shared by ``collect
+    --workloads`` and ``plaid-compile store warm --workloads``)."""
+    wanted = set(keys)
+    chosen = [w for w in table if f"{w.name}_u{w.unroll}" in wanted]
+    missing = wanted - {f"{w.name}_u{w.unroll}" for w in chosen}
+    if missing:
+        raise KeyError(
+            f"unknown workload key(s) {sorted(missing)}; known: "
+            + ", ".join(f"{w.name}_u{w.unroll}" for w in table)
+        )
+    return chosen

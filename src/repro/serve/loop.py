@@ -27,8 +27,13 @@ def generate(
     if extra_batch:
         batch.update(extra_batch)
     prefill = jax.jit(steps_lib.make_prefill_step(cfg))
-    serve = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(1,))
     cache, logits = prefill(params, batch)
+    if max_new_tokens <= 0:
+        # exactly zero new tokens: prefill only (cache stays usable for a
+        # later decode); the old loop emitted one token here regardless
+        tokens = jnp.zeros((prompts.shape[0], 0), jnp.int32)
+        return tokens, {"cache_length": int(cache["length"][0])}
+    serve = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=(1,))
     cache = grow_cache(cache, max_new_tokens, window=cfg.sliding_window)
     next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
     out: List[jax.Array] = [next_tok]

@@ -45,6 +45,29 @@ def test_prefill_then_decode_matches_forward(arch):
         np.testing.assert_allclose(got, want, rtol=0.12, atol=0.25)
 
 
+def test_generate_token_budget_exact():
+    """``generate`` must emit exactly ``max_new_tokens`` tokens — the seed
+    loop emitted one token even at ``max_new_tokens=0``."""
+    from repro.serve.loop import generate
+
+    cfg = smoke_config("llama3_2_3b").replace(n_layers=2)
+    params = init_of(zoo.param_spec(cfg), jax.random.PRNGKey(0))
+    prompts = jnp.zeros((2, 8), jnp.int32)
+
+    t0, info0 = generate(cfg, params, prompts, max_new_tokens=0)
+    assert t0.shape == (2, 0)
+    assert info0["cache_length"] == 8  # prefill only, cache still usable
+
+    t1, info1 = generate(cfg, params, prompts, max_new_tokens=1)
+    assert t1.shape == (2, 1)
+    assert info1["cache_length"] == 8  # one greedy token, no decode step
+
+    # the single token agrees with the first token of a longer decode
+    t4, _ = generate(cfg, params, prompts, max_new_tokens=4)
+    assert t4.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t4[:, :1]))
+
+
 def test_sliding_window_ring_buffer():
     cfg = smoke_config("h2o_danube_3_4b").replace(attn_impl="naive", sliding_window=8)
     params = init_of(zoo.param_spec(cfg), jax.random.PRNGKey(0))
