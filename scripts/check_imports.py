@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""CI gate for the `repro.mapping` decomposition (PR 5).
+
+Two checks, both cheap enough to run on every CI pass:
+
+1. **Compat shim** — import every name `repro.core.mapper` historically
+   exported and verify each resolves to the same object `repro.mapping`
+   provides.  The shim is the contract that keeps the ten pre-split import
+   sites (tests, examples, spatial, external notebooks) working; a name
+   silently dropped from it is a break this gate turns loud.
+
+2. **Import DAG** — parse every non-``__init__`` module under
+   ``src/repro/mapping`` and fail on any module-level import cycle inside
+   the package.  The layering (mrrg -> mapping -> passes.base ->
+   passes.{route,extract} -> passes.{place,negotiate,finalize} -> mappers)
+   is what makes the passes independently testable and reusable; cycles
+   would quietly reintroduce the monolith.  Package ``__init__`` facades
+   are excluded — they re-export everything by design.
+
+Usage:  PYTHONPATH=src python scripts/check_imports.py
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+PKG = "repro.mapping"
+PKG_DIR = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
+                       "mapping")
+
+#: every public (and historically-relied-on private) name of the pre-split
+#: repro.core.mapper monolith; the shim must keep exporting all of them
+LEGACY_MAPPER_NAMES = [
+    "BIG", "MRRG", "RouteStats", "MapperStats", "Mapping",
+    "DfgTables", "_DfgTables", "_BaseMapper",
+    "start_resources", "min_span", "route_edge", "_route_edge_once",
+    "motif_templates", "Unit",
+    "SAMapper", "PathFinderMapper", "HierarchicalMapper",
+    "NodeGreedyMapper", "PathFinderMapper2", "PathFinderSelectiveMapper",
+]
+
+
+def check_shim() -> int:
+    import importlib
+
+    shim = importlib.import_module("repro.core.mapper")
+    pkg_mods = [importlib.import_module(m) for m in (
+        "repro.mapping", "repro.mapping.mapping", "repro.mapping.mrrg",
+        "repro.mapping.mappers", "repro.mapping.passes",
+    )]
+    bad = 0
+    for name in LEGACY_MAPPER_NAMES:
+        try:
+            obj = getattr(shim, name)
+        except AttributeError:
+            print(f"FAIL shim: repro.core.mapper.{name} is gone")
+            bad += 1
+            continue
+        if not any(getattr(m, name, None) is obj or name.startswith("_")
+                   for m in pkg_mods):
+            print(f"FAIL shim: repro.core.mapper.{name} does not match "
+                  f"any repro.mapping export")
+            bad += 1
+    if not bad:
+        print(f"shim OK: {len(LEGACY_MAPPER_NAMES)} legacy names resolve")
+    return bad
+
+
+def _module_name(path: str) -> str:
+    rel = os.path.relpath(path, os.path.join(PKG_DIR, "..", ".."))
+    mod = rel[:-3].replace(os.sep, ".")
+    return mod[:-len(".__init__")] if mod.endswith(".__init__") else mod
+
+
+def _intra_imports(path: str, modules: set) -> set:
+    """Module-level imports of other repro.mapping modules (AST; imports
+    inside functions are runtime-lazy and cannot cycle at import time)."""
+    with open(path) as f:
+        tree = ast.parse(f.read(), path)
+    out = set()
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in modules:
+                    out.add(a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module in modules:
+                out.add(node.module)
+    return out
+
+
+def check_dag() -> int:
+    files = {}
+    for root, _, names in os.walk(PKG_DIR):
+        for n in names:
+            if n.endswith(".py") and n != "__init__.py":
+                p = os.path.join(root, n)
+                files[_module_name(p)] = p
+    graph = {m: _intra_imports(p, set(files)) for m, p in files.items()}
+
+    # DFS cycle detection with path reporting
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {m: WHITE for m in graph}
+    stack: list = []
+    cycles = []
+
+    def dfs(m):
+        color[m] = GREY
+        stack.append(m)
+        for d in sorted(graph[m]):
+            if color[d] == GREY:
+                cycles.append(stack[stack.index(d):] + [d])
+            elif color[d] == WHITE:
+                dfs(d)
+        stack.pop()
+        color[m] = BLACK
+
+    for m in sorted(graph):
+        if color[m] == WHITE:
+            dfs(m)
+    if cycles:
+        for c in cycles:
+            print("FAIL import cycle: " + " -> ".join(c))
+        return len(cycles)
+    print(f"import DAG OK: {len(graph)} modules, no cycles")
+    return 0
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    bad = check_shim() + check_dag()
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

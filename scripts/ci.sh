@@ -23,6 +23,11 @@ else
     timeout "$BUDGET" python -m pytest -x -q --quick
 fi
 
+echo "== repro.mapping compat shim + import-cycle gate =="
+# every legacy repro.core.mapper public name must keep importing, and the
+# repro.mapping package must stay a DAG (no intra-package import cycles)
+python scripts/check_imports.py
+
 echo "== compiler CLI smoke: every registered mapper on one workload =="
 ART_DIR=$(mktemp -d /tmp/ci_artifacts.XXXXXX)
 timeout "$BUDGET" python -m repro.compiler compile atax -u 2 --all-jobs \

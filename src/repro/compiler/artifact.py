@@ -12,12 +12,12 @@ the configuration against the DFG oracle — **without re-running place &
 route**.  This is what lets a results cache / serving tier hand out mappings
 and still prove them correct on the consumer side.
 
-Schema (``repro.compiler/artifact@2``; ``@1`` artifacts still load —
-``route_cache`` and the place/route/negotiate timing keys are simply
-absent)::
+Schema (``repro.compiler/artifact@3``; ``@1``/``@2`` artifacts still load —
+``route_cache``, the place/route/negotiate timing keys, and the uniform
+per-pass stats are simply absent)::
 
     {
-      "schema":   "repro.compiler/artifact@2",
+      "schema":   "repro.compiler/artifact@3",
       "workload": {"name", "unroll", "iterations", "domain"}
                   | {"dfg_name", "iterations", "dfg_sha256"},  # raw-DFG input
       "arch":     "plaid2x2",          # registered arch name
@@ -31,6 +31,8 @@ absent)::
                    "place": s, "route": s, "negotiate": s},  # 3-way P&R split
       "route_cache": {"hits_exact", "hits_scoped", "misses", "evictions",
                       "hit_rate"} | null,  # cross-move route memoization
+      "pass_stats": [{"name", "wall_s", "calls", ...}] | null,
+                                         # repro.mapping per-pass breakdown
       "motifs":   {"n_units", "fanout", "fanin", "unicast", "single"} | null,
       "mappings": [{"dfg": DFG.to_json(), "ii", "place", "time", "routes",
                     "makespan"}],      # one per segment (spatial) else one
@@ -50,15 +52,20 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-ARTIFACT_SCHEMA = "repro.compiler/artifact@2"
+ARTIFACT_SCHEMA = "repro.compiler/artifact@3"
 #: schemas ``load()`` accepts; @1 predates the placement engine (PR 3) and
-#: simply lacks route_cache / the per-stage P&R timing keys
-SUPPORTED_SCHEMAS = ("repro.compiler/artifact@1", ARTIFACT_SCHEMA)
-REPRO_VERSION = "0.3.0"
+#: simply lacks route_cache / the per-stage P&R timing keys, @2 predates
+#: the repro.mapping pass pipeline (PR 5) and lacks the per-pass stats
+SUPPORTED_SCHEMAS = ("repro.compiler/artifact@1", "repro.compiler/artifact@2",
+                     ARTIFACT_SCHEMA)
+# 0.4.0: mapper decomposition into repro.mapping + pathfinder negotiation
+# default flipped to "selective" (a mapper-behavior change: store keys must
+# namespace away from 0.3.x artifacts)
+REPRO_VERSION = "0.4.0"
 
 
 def mapping_to_record(mapping) -> Dict[str, object]:
-    """Serialize a :class:`~repro.core.mapper.Mapping` (with its DFG)."""
+    """Serialize a :class:`~repro.mapping.Mapping` (with its DFG)."""
     return {
         "dfg": mapping.dfg.to_json(),
         "ii": mapping.ii,
@@ -98,13 +105,13 @@ def normalize_record(rec: Dict[str, object]) -> Dict[str, object]:
 
 
 def mapping_from_record(rec: Dict[str, object], arch_name: str):
-    """Rebuild a validated :class:`~repro.core.mapper.Mapping` from a
+    """Rebuild a validated :class:`~repro.mapping.Mapping` from a
     record — no place & route runs; ``Mapping.validate()`` re-checks every
     structural invariant (placement legality, route presence/timing,
     modulo-slot capacity) before the mapping is handed out."""
     from repro.core.arch import make_arch
     from repro.core.dfg import DFG
-    from repro.core.mapper import Mapping
+    from repro.mapping import Mapping
 
     rec = normalize_record(rec)
     if rec["ii"] is None:
@@ -141,6 +148,9 @@ class CompileResult:
     verified: Optional[bool] = None
     provenance: Dict[str, object] = field(default_factory=dict)
     route_cache: Optional[Dict[str, object]] = None
+    #: uniform per-pass breakdown from the repro.mapping pipeline: one row
+    #: per pass ({"name", "wall_s", "calls", ...}), in execution order
+    pass_stats: Optional[List[Dict[str, object]]] = None
     #: set by ``compile(..., store=...)`` only: True = served from the
     #: store without P&R, False = freshly compiled (and inserted), None =
     #: no store involved.  Runtime-only — never serialized, so a hit
@@ -181,6 +191,7 @@ class CompileResult:
             "verified": self.verified,
             "provenance": self.provenance,
             "route_cache": self.route_cache,
+            "pass_stats": self.pass_stats,
         }
 
     @classmethod
@@ -208,6 +219,7 @@ class CompileResult:
             verified=data.get("verified"),
             provenance=data.get("provenance") or {},
             route_cache=data.get("route_cache"),
+            pass_stats=data.get("pass_stats"),
         )
 
     def save(self, path: str) -> str:
@@ -261,6 +273,8 @@ class CompileResult:
         }
         if self.route_cache:
             out["route_cache"] = self.route_cache
+        if self.pass_stats:
+            out["passes"] = self.pass_stats
         if self.motifs:
             out["motifs"] = self.motifs
         if self.spatial:

@@ -150,7 +150,7 @@ def load_ii_results(path: str) -> Dict[str, Dict[str, Optional[int]]]:
         return out
     with open(path) as f:
         data = json.load(f)
-    if data.get("schema") == ARTIFACT_SCHEMA:
+    if data.get("schema") in SUPPORTED_SCHEMAS:
         out = {}
         _merge_artifact(out, path)
         return out
@@ -249,15 +249,20 @@ def _cmd_compile(args) -> int:
 
 
 def _stage_line(art: CompileResult) -> Optional[str]:
-    """One-line place/route/negotiate split + route-cache hit rate for
-    artifacts produced by the placement engine (schema @2)."""
+    """One-line place/route/negotiate split + per-pass breakdown +
+    route-cache hit rate for artifacts produced by the placement engine
+    (schema @2) / the repro.mapping pass pipeline (schema @3)."""
     tm = art.timings
-    if "place" not in tm and not art.route_cache:
+    if "place" not in tm and not art.route_cache and not art.pass_stats:
         return None  # pre-engine artifact (@1): no split recorded
     parts = []
     for stage in ("place", "route", "negotiate"):
         if stage in tm:
             parts.append(f"{stage}={tm[stage]:.3f}s")
+    if art.pass_stats:
+        parts.append("passes[" + " ".join(
+            f"{p['name']}={p.get('wall_s', 0.0):.3f}s"
+            f"/{p.get('calls', 0)}x" for p in art.pass_stats) + "]")
     if art.route_cache:
         rc_ = art.route_cache
         parts.append(

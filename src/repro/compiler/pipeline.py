@@ -27,9 +27,9 @@ from typing import Dict, Optional, Tuple, Union
 
 from repro.compiler.store import ArtifactStore, CompileKey, open_store
 
-# Importing the core modules populates the mapper/arch registries.
-import repro.core.mapper  # noqa: F401
+# Importing the mapper/spatial modules populates the mapper/arch registries.
 import repro.core.spatial  # noqa: F401
+import repro.mapping  # noqa: F401
 from repro.compiler.artifact import (
     CompileResult,
     mapping_to_record,
@@ -160,8 +160,9 @@ def compile_key(
 
 def _unit_stats(mapper_obj) -> Optional[Dict[str, int]]:
     """Motif-cover statistics of the unit decomposition the mapper actually
-    used (cached by ``HierarchicalMapper._units_cached``); ``None`` for
-    mappers without a unit decomposition (SA, spatial)."""
+    used (the ``PassContext.units_for`` cache, surfaced by the unit
+    mappers' ``_units_cache`` compat property); ``None`` for mappers
+    without a unit decomposition (SA, spatial)."""
     cached = getattr(mapper_obj, "_units_cache", None)
     if not cached:
         return None
@@ -328,6 +329,9 @@ def compile(
         out.timings["negotiate"] = negotiate
         out.timings["place"] = max(0.0, pnr - route - negotiate)
         out.route_cache = est.get("route_cache")
+        # the uniform per-pass schema (repro.mapping pipelines): one row per
+        # pass in execution order, accumulated over every II attempt/restart
+        out.pass_stats = est.get("passes") or None
     if store is not None and key is not None:
         # a verify-FAILED mapping must never enter the store: serving it
         # later (policy "never") would hand out a disproven mapping, and

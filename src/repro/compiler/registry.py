@@ -102,7 +102,7 @@ def register_mapper(name: str, **kw) -> Callable:
     maps collect-grid job names to arch names; ``result="spatial"`` marks
     factories whose ``.map`` returns a
     :class:`~repro.core.spatial.SpatialResult` instead of a
-    :class:`~repro.core.mapper.Mapping`."""
+    :class:`~repro.mapping.Mapping`."""
     return MAPPERS.register(name, **kw)
 
 

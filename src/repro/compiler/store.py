@@ -38,7 +38,11 @@ Durability / correctness properties:
   with the directory listing (e.g. a writer died between entry and index
   update), it is rebuilt by scanning the entries.
 * **LRU eviction** — with ``max_bytes`` set, least-recently-served
-  entries are evicted on ``put``/``gc`` until the payload fits.
+  entries are evicted on ``put``/``gc`` until the payload fits.  Recency
+  is a **monotonic sequence counter** persisted in the index (``seq``,
+  advanced under the index lock on every serve/insert), not a wall-clock
+  stamp: NFS or clock-skewed writers cannot reorder eviction.  The
+  wall-clock ``last_used`` field is retained for display only.
 """
 from __future__ import annotations
 
@@ -353,8 +357,20 @@ class ArtifactStore:
             "hits": int(prev.get("hits", 0)) if prev else 0,
             "created": (prev or {}).get("created", time.time()),
             "last_used": (prev or {}).get("last_used", time.time()),
+            # monotonic access stamp (LRU order); 0 = never stamped — rows
+            # rebuilt from pre-seq indexes fall back to last_used ordering
+            "seq": int((prev or {}).get("seq", 0)),
         }
         return row
+
+    @staticmethod
+    def _next_seq(entries: Dict[str, Dict]) -> int:
+        """Next monotonic access stamp.  Derived from the persisted maximum
+        under the index lock, so it advances across processes and is immune
+        to wall-clock skew (the old ``last_used`` eviction order degraded
+        under NFS/clock-skewed writers)."""
+        return 1 + max((int(r.get("seq", 0)) for r in entries.values()),
+                       default=0)
 
     def _write_index(self, entries: Dict[str, Dict]):
         atomic_write_json(self.index_path,
@@ -435,6 +451,7 @@ class ArtifactStore:
                 # the producer already proved this mapping against the
                 # oracle; 'first' consumers need not re-run the simulator
                 row["verified"] = True
+            row["seq"] = self._next_seq(entries)
             entries[digest] = row
             self._evict_over_cap(entries, protect=digest)
 
@@ -480,7 +497,8 @@ class ArtifactStore:
         def touch(entries):
             row = entries.get(digest)
             if row is not None:
-                row["last_used"] = time.time()
+                row["last_used"] = time.time()  # display only
+                row["seq"] = self._next_seq(entries)  # LRU order
                 row["hits"] = int(row.get("hits", 0)) + 1
                 if verified_now:
                     row["verified"] = True
@@ -517,11 +535,13 @@ class ArtifactStore:
         self._update_index(lambda entries: entries.pop(digest, None))
 
     def ls(self) -> List[Dict]:
-        """Index rows sorted most-recently-used first."""
+        """Index rows sorted most-recently-used first (by the monotonic
+        ``seq`` stamp; pre-seq rows order by wall-clock ``last_used``)."""
         rows = []
         for digest, row in self.index().items():
             rows.append(dict(row, key_digest=digest))
-        rows.sort(key=lambda r: -r.get("last_used", 0.0))
+        rows.sort(key=lambda r: (-int(r.get("seq", 0)),
+                                 -r.get("last_used", 0.0)))
         return rows
 
     def total_bytes(self) -> int:
@@ -534,9 +554,13 @@ class ArtifactStore:
         if cap is None:
             return
         total = sum(int(r.get("size", 0)) for r in entries.values())
+        # least-recently-used first by the monotonic seq stamp; rows that
+        # predate seq (0) evict before any stamped row, oldest wall-clock
+        # first among themselves
         victims = sorted(
             (d for d in entries if d != protect),
-            key=lambda d: entries[d].get("last_used", 0.0),
+            key=lambda d: (int(entries[d].get("seq", 0)),
+                           entries[d].get("last_used", 0.0)),
         )
         for digest in victims:
             if total <= cap:

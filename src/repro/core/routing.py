@@ -1,6 +1,6 @@
 """Shared fast routing engine for all Track-A mappers.
 
-The per-edge router in :mod:`repro.core.mapper` performs an elapsed-time
+The per-edge router in :mod:`repro.mapping.passes.route` performs an elapsed-time
 DP/Dijkstra over the time-extended MRRG.  Profiling shows the mappers spend
 essentially all of their time in that inner loop, and that the overwhelming
 majority of explored states can never reach the destination in the cycles
@@ -16,7 +16,7 @@ the static structures that let the router prune those states up front:
   ``u`` to ``v``, so any state whose remaining-cycle budget is smaller can be
   discarded without changing the optimum (A*-style unreachable pruning);
 * per-FU caches — ``starts(fu)`` (the resources a value lands on one cycle
-  after production, see :func:`repro.core.mapper.start_resources`) and
+  after production, see :func:`repro.mapping.mrrg.start_resources`) and
   ``h_to_reads(fu)`` (minimum hops from every resource to any resource the
   FU's operand mux can read: the A* heuristic / pruning table);
 * FU×FU span matrices — ``min_span_mat`` (the cheap Manhattan heuristic) and
@@ -65,7 +65,7 @@ ROUTE_MISS = object()
 
 
 class RouteCache:
-    """Cross-move route memoization for :func:`repro.core.mapper.route_edge`.
+    """Cross-move route memoization for :func:`repro.mapping.passes.route.route_edge`.
 
     Two tiers, both deterministic:
 
@@ -205,10 +205,10 @@ class RoutingEngine:
         return dist
 
     def starts(self, fu) -> List[int]:
-        """Cached :func:`repro.core.mapper.start_resources` for ``fu``."""
+        """Cached :func:`repro.mapping.mrrg.start_resources` for ``fu``."""
         out = self._starts.get(fu.id)
         if out is None:
-            from repro.core.mapper import start_resources
+            from repro.mapping.mrrg import start_resources
 
             out = start_resources(self.arch, fu)
             self._starts[fu.id] = out
@@ -245,7 +245,7 @@ class RoutingEngine:
         Manhattan heuristic the mappers' ``_span_ok`` filter uses, exposed
         for numpy fancy-indexing over flat candidate arrays."""
         if self._min_span_mat is None:
-            from repro.core.mapper import min_span
+            from repro.mapping.mrrg import min_span
 
             fus = self.arch.fus
             n = len(fus)

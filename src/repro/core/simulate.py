@@ -12,7 +12,7 @@ from __future__ import annotations
 from typing import Dict, List, Tuple
 
 from repro.core.dfg import DFG, _apply
-from repro.core.mapper import Mapping
+from repro.mapping import Mapping
 
 
 def simulate(mapping: Mapping, iterations: int = 4) -> Dict[Tuple[int, int], float]:

@@ -15,7 +15,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.compiler.registry import register_mapper
 from repro.core.arch import Arch, make_arch
 from repro.core.dfg import DFG
-from repro.core.mapper import Mapping, NodeGreedyMapper
+from repro.mapping import Mapping, NodeGreedyMapper
 
 RECONFIG_CYCLES = 16  # config-memory reload between segments
 

@@ -1,0 +1,59 @@
+"""`repro.mapping` — the layered Track-A mapper package.
+
+The paper's compiler is staged — motif identification (Alg. 1),
+hierarchical motif placement (Alg. 2), routing, congestion negotiation —
+and this package mirrors those stages as an explicit pass pipeline:
+
+* :mod:`repro.mapping.mrrg` — the time-extended MRRG (flat occupancy /
+  history arrays, zobrist state hashes) + fabric latency helpers;
+* :mod:`repro.mapping.mapping` — :class:`Mapping` (placement + schedule +
+  routes, structural validation), per-DFG tables, mapper stats;
+* :mod:`repro.mapping.passes` — the pass library: extraction, placement
+  engines, routing, negotiation, finalize, over a shared
+  :class:`~repro.mapping.passes.base.PassContext`;
+* :mod:`repro.mapping.mappers` — registered mappers as thin pass
+  compositions (``sa``, ``hierarchical``, ``node_greedy``, ``pathfinder``,
+  ``pathfinder_selective``).
+
+``repro.core.mapper`` remains as a compat shim re-exporting the public
+names; new code should import from here.  See docs/mapper.md for the layer
+diagram and how to compose a new mapper from passes.
+"""
+from repro.mapping.mapping import (  # noqa: F401
+    DfgTables,
+    Mapping,
+    MapperStats,
+)
+from repro.mapping.mappers import (  # noqa: F401
+    HierarchicalMapper,
+    NodeGreedyMapper,
+    PathFinderMapper,
+    PathFinderMapper2,
+    PathFinderSelectiveMapper,
+    PipelineMapper,
+    SAMapper,
+)
+from repro.mapping.mrrg import (  # noqa: F401
+    BIG,
+    MRRG,
+    RouteStats,
+    min_span,
+    start_resources,
+)
+from repro.mapping.passes import (  # noqa: F401
+    MapperPass,
+    MapState,
+    PassContext,
+    Unit,
+    motif_templates,
+    route_edge,
+)
+
+__all__ = [
+    "BIG", "MRRG", "RouteStats", "min_span", "start_resources",
+    "DfgTables", "Mapping", "MapperStats",
+    "MapperPass", "MapState", "PassContext", "Unit", "motif_templates",
+    "route_edge",
+    "PipelineMapper", "SAMapper", "PathFinderMapper", "HierarchicalMapper",
+    "NodeGreedyMapper", "PathFinderMapper2", "PathFinderSelectiveMapper",
+]

@@ -1,0 +1,58 @@
+"""Pass library for the `repro.mapping` pipeline.
+
+Layering (a DAG — enforced by ``scripts/check_imports.py`` in CI):
+
+* :mod:`~repro.mapping.passes.base` — :class:`PassContext` / `MapState` /
+  `MapperPass` framework (depends only on the mapping/mrrg layers);
+* :mod:`~repro.mapping.passes.route` — the per-edge router + incremental
+  reroute primitives;
+* :mod:`~repro.mapping.passes.extract` — motif/unit extraction;
+* :mod:`~repro.mapping.passes.place` — node and unit placement engines and
+  their passes (greedy, SA, multi-start, overuse construction);
+* :mod:`~repro.mapping.passes.negotiate` — full + selective rip-up
+  negotiation;
+* :mod:`~repro.mapping.passes.finalize` — completeness + validation.
+"""
+from repro.mapping.passes.base import (  # noqa: F401
+    CONTINUE,
+    FAIL,
+    MapperPass,
+    MapState,
+    PassContext,
+)
+from repro.mapping.passes.extract import (  # noqa: F401
+    Unit,
+    UnitExtractionPass,
+    hierarchical_units,
+    motif_templates,
+    node_units,
+)
+from repro.mapping.passes.finalize import FinalizePass  # noqa: F401
+from repro.mapping.passes.negotiate import (  # noqa: F401
+    LegacyNegotiationPass,
+    NegotiatedMultiStartPass,
+    negotiate_selective,
+)
+from repro.mapping.passes.place import (  # noqa: F401
+    GreedyConstructionPass,
+    MultiStartUnitPlacementPass,
+    NodePlacer,
+    OveruseNodeConstructionPass,
+    SAImprovementPass,
+    UnitPlacer,
+)
+from repro.mapping.passes.route import (  # noqa: F401
+    Router,
+    _route_edge_once,
+    route_edge,
+)
+
+__all__ = [
+    "CONTINUE", "FAIL", "MapperPass", "MapState", "PassContext",
+    "Unit", "UnitExtractionPass", "hierarchical_units", "motif_templates",
+    "node_units", "FinalizePass", "LegacyNegotiationPass",
+    "NegotiatedMultiStartPass", "negotiate_selective",
+    "GreedyConstructionPass", "MultiStartUnitPlacementPass", "NodePlacer",
+    "OveruseNodeConstructionPass", "SAImprovementPass", "UnitPlacer",
+    "Router", "route_edge",
+]

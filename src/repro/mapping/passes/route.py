@@ -1,0 +1,296 @@
+"""Routing pass layer: the per-edge router + incremental reroute primitives.
+
+* :func:`route_edge` — elapsed-time Dijkstra/DP from a producer's output
+  resources to a resource the consumer's operand mux can read, arriving at
+  exactly the consumer's issue cycle (holdable resources may buffer).  The
+  search uses the per-:class:`~repro.core.routing.RoutingEngine` all-pairs
+  hop-distance table as an admissible A* heuristic: states that cannot reach
+  the destination in the cycles remaining are pruned without changing the
+  optimum (results are bit-identical to the original blind search).  With a
+  :class:`~repro.core.routing.RouteCache`, queries are served from memoized
+  results when the MRRG occupancy state (or, scoped tier, the cached path's
+  slots) is unchanged.
+* :class:`Router` — the context-bound primitives every placement and
+  negotiation pass shares: (re)route the edges touching a node set, route an
+  explicit edge-index list (ascending, rip-first), rip a node's routes.
+
+All latencies are 1 cycle; a value produced at t is readable at t+1 from the
+producer's output register / local router (Plaid collects ALU outputs into
+the collective router directly) / own output ports (ST writes straight to
+port registers) — see :func:`repro.mapping.mrrg.start_resources`.
+"""
+from __future__ import annotations
+
+from time import perf_counter
+from typing import List, Optional, Set, Tuple
+
+from repro.core.arch import FU
+from repro.core.dfg import DFG
+from repro.core.routing import ROUTE_MISS, UNREACH, RouteCache
+from repro.mapping.mapping import Mapping
+from repro.mapping.mrrg import MRRG
+
+
+def route_edge(
+    mrrg: MRRG,
+    net: int,
+    src_fu: FU,
+    dst_fu: FU,
+    t_src: int,
+    t_dst: int,
+    *,
+    allow_overuse: bool = False,
+    cache: Optional[RouteCache] = None,
+) -> Optional[Tuple[List[Tuple[int, int]], float]]:
+    """Route one value with modulo-conflict repair: when the min-cost path
+    would occupy one (resource, cycle-mod-II) slot twice (value lifetime >
+    II through a single register), the conflicting slots are masked and the
+    search retried — modulo variable expansion across register chains.
+
+    With a :class:`RouteCache`, the query is served from memoized results
+    when the MRRG occupancy state (or, scoped tier, the cached path's slots)
+    is unchanged — see the cache docstring for the exactness guarantees.
+    """
+    stats = mrrg.stats
+    t0 = perf_counter()
+    stats.calls += 1
+    if cache is not None:
+        key = (mrrg.ii, net, src_fu.id, dst_fu.id, t_src, t_dst, allow_overuse)
+        out = cache.lookup(mrrg, key)
+        if out is not ROUTE_MISS:
+            stats.route_s += perf_counter() - t0
+            return out
+    avoid: Set[Tuple[int, int]] = set()
+    out = None
+    for _ in range(4):
+        r = _route_edge_once(
+            mrrg, net, src_fu, dst_fu, t_src, t_dst,
+            allow_overuse=allow_overuse, avoid=avoid,
+        )
+        if r is None:
+            break
+        path, cost, conflicts = r
+        if not conflicts:
+            out = (path, cost)
+            break
+        avoid |= conflicts
+    if cache is not None:
+        cache.store(mrrg, key, out)
+    stats.route_s += perf_counter() - t0
+    return out
+
+
+def _route_edge_once(
+    mrrg: MRRG,
+    net: int,
+    src_fu: FU,
+    dst_fu: FU,
+    t_src: int,
+    t_dst: int,
+    *,
+    allow_overuse: bool = False,
+    avoid: Optional[Set[Tuple[int, int]]] = None,
+):
+    """Elapsed-time DP with A*-style pruning from the precomputed all-pairs
+    hop-distance table: a state (rid, step k) is expanded only if the
+    destination's operand inputs are still reachable in the remaining
+    ``span - k`` cycles (``h[rid] <= span - k``).  The pruned state set is
+    closed under the legacy full-layer DP's relaxations that matter — any
+    pruned state provably cannot reach the goal — and viable states are
+    relaxed in the same ascending-rid / architecture-edge order, so paths,
+    costs and tie-breaks are bit-identical to the original blind Dijkstra/DP.
+    """
+    eng = mrrg.engine
+    span = t_dst - t_src
+    if span < 1:
+        return None
+    h = eng.h_to_reads(dst_fu)
+    starts = eng.starts(src_fu)
+    rem = span - 1
+    if min((h[r] for r in starts), default=UNREACH) > rem:
+        return None  # unreachable at this span, regardless of occupancy
+    ii = mrrg.ii
+    n = eng.n
+    succ = eng.succ
+    cap = eng.cap
+    sv = mrrg.slot_vals
+    base = mrrg._base
+    INF = float("inf")
+    cost = [INF] * n
+    # back[k][rid] = predecessor rid at step k (None = start/unreached; the
+    # two coincide only at k == 1, which reconstruction handles)
+    back: List[Optional[List[Optional[int]]]] = [None] * (span + 1)
+    back[1] = [None] * n
+    t1 = t_src + 1
+    cyc1 = t1 % ii
+    active: List[int] = []  # rids with finite cost, ascending (legacy order)
+    for rid in starts:
+        if h[rid] > rem:
+            continue
+        if avoid and (rid, cyc1) in avoid:
+            continue
+        k = rid * ii + cyc1
+        vals = sv[k]
+        if vals is not None and (net, t1) in vals:
+            c = 0.05  # same value reuse (fan-out) is nearly free
+        else:
+            over = (len(vals) if vals is not None else 0) + 1 - cap[rid]
+            if over > 0:
+                if not allow_overuse:
+                    continue
+                c = base[k] + 8.0 * over
+            else:
+                c = base[k]
+        if c < cost[rid]:
+            if cost[rid] == INF:
+                active.append(rid)
+            cost[rid] = c
+    active.sort()
+    for step in range(2, span + 1):
+        t = t_src + step
+        cyc = t % ii
+        rem = span - step
+        ncost = [INF] * n
+        backk = back[step] = [None] * n
+        nactive: List[int] = []
+        # per-layer slot cost memo: the cost of entering (nxt, cyc) is the
+        # same whichever predecessor relaxes it, so compute it once per
+        # layer (INF = pruned/blocked at this layer); relaxation order and
+        # tie-breaks are unchanged
+        cmemo = [-1.0] * n
+        for rid in active:
+            cprev = cost[rid]
+            for nxt in succ[rid]:
+                nc = ncost[nxt]
+                if cprev + 0.05 >= nc:
+                    continue  # cannot strictly improve even at min step cost
+                c = cmemo[nxt]
+                if c < 0.0:
+                    if h[nxt] > rem or (avoid and (nxt, cyc) in avoid):
+                        c = INF
+                    else:
+                        k = nxt * ii + cyc
+                        vals = sv[k]
+                        if vals is not None and (net, t) in vals:
+                            c = 0.05
+                        else:
+                            over = (
+                                (len(vals) if vals is not None else 0)
+                                + 1 - cap[nxt]
+                            )
+                            if over > 0:
+                                c = base[k] + 8.0 * over if allow_overuse else INF
+                            else:
+                                c = base[k]
+                    cmemo[nxt] = c
+                tot = cprev + c
+                if tot < nc:
+                    if nc == INF:
+                        nactive.append(nxt)
+                    ncost[nxt] = tot
+                    backk[nxt] = rid
+        if not nactive:
+            return None
+        nactive.sort()
+        active = nactive
+        cost = ncost
+    # arrival: must sit in a readable resource at t_dst
+    best_rid, best_cost = None, INF
+    for rid in set(dst_fu.reads):
+        if cost[rid] < best_cost:
+            best_cost = cost[rid]
+            best_rid = rid
+    if best_rid is None:
+        return None
+    # reconstruct
+    path = []
+    rid = best_rid
+    for k in range(span, 0, -1):
+        path.append((rid, t_src + k))
+        rid = back[k][rid]
+        if rid is None and k > 1:
+            return None
+    path.reverse()
+    # self-conflict: same net must not need one (rid, mod) slot twice
+    mods = [(r, mrrg.cyc(t)) for r, t in path]
+    conflicts = {m for m in mods if mods.count(m) > 1}
+    return path, best_cost, conflicts
+
+
+class Router:
+    """Context-bound incremental (re)route primitives shared by every
+    placement and negotiation pass."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+
+    def route_node_edges(
+        self, mrrg: MRRG, dfg: DFG, mapping: Mapping, nodes: Set[int],
+        allow_overuse=False, stop_on_fail=False,
+    ) -> Tuple[bool, float]:
+        """(Re)route only the edges touching ``nodes`` whose endpoints are
+        placed — the incremental rip-up/reroute primitive behind every SA
+        move.  Edge order matches the legacy full-scan (ascending index)."""
+        tab = self.ctx.tables(dfg)
+        by_node = tab.edges_by_node
+        if len(nodes) == 1:
+            (n0,) = nodes
+            idxs = by_node.get(n0, ())
+        else:
+            s: Set[int] = set()
+            for n0 in nodes:
+                s.update(by_node.get(n0, ()))
+            idxs = sorted(s)
+        return self.route_edge_list(
+            mrrg, dfg, mapping, idxs, allow_overuse, stop_on_fail
+        )
+
+    def route_edge_list(
+        self, mrrg: MRRG, dfg: DFG, mapping: Mapping, idxs, allow_overuse=False,
+        stop_on_fail=False,
+    ) -> Tuple[bool, float]:
+        """Route the given edge indices (ascending) between placed endpoints;
+        existing routes are ripped first.  The routing primitive shared by
+        the per-node incremental path and selective negotiation.
+
+        ``stop_on_fail`` aborts at the first unroutable edge — only for
+        callers that discard the candidate on any failure (the strict
+        placement scan): the remaining searches cannot change the rejection,
+        and the rollback releases whatever was reserved either way.
+        """
+        total = 0.0
+        ok = True
+        edges = dfg.edges
+        fus = self.ctx.arch.fus
+        place, tm = mapping.place, mapping.time
+        cache = self.ctx.route_cache
+        for idx in idxs:
+            e = edges[idx]
+            if e.src not in place or e.dst not in place:
+                continue
+            if idx in mapping.routes:
+                mrrg.release(e.src, mapping.pop_route(idx))
+            if dfg.nodes[e.src].op in ("const", "input"):
+                continue
+            t_dst = tm[e.dst] + e.distance * mapping.ii
+            r = route_edge(
+                mrrg, e.src, fus[place[e.src]], fus[place[e.dst]],
+                tm[e.src], t_dst, allow_overuse=allow_overuse, cache=cache,
+            )
+            if r is None:
+                ok = False
+                total += 50.0
+                if stop_on_fail:
+                    break
+                continue
+            path, c = r
+            mrrg.reserve(e.src, path)
+            mapping.set_route(idx, path)
+            total += c
+        return ok, total
+
+    def unroute_node(self, mrrg: MRRG, dfg: DFG, mapping: Mapping, n: int):
+        edges = dfg.edges
+        for idx in self.ctx.tables(dfg).edges_by_node.get(n, ()):
+            if idx in mapping.routes:
+                mrrg.release(edges[idx].src, mapping.pop_route(idx))

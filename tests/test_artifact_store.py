@@ -783,3 +783,76 @@ def test_collect_unknown_workload_filter_raises(tmp_path):
     with pytest.raises(KeyError, match="nope_u9"):
         collect(str(tmp_path / "r.json"), quick=True,
                 workloads=["nope_u9"])
+
+
+# -- monotonic LRU seq (clock-skew-immune eviction) --------------------------
+
+
+def test_lru_seq_immune_to_clock_skew(tmp_path, monkeypatch):
+    """Eviction order follows the persisted monotonic ``seq`` counter, not
+    wall-clock ``last_used``: with a clock running BACKWARDS (NFS/skewed
+    writers), the most-recently-served entry still survives the gc."""
+    import repro.compiler.store as store_mod
+
+    skewed = iter(range(10**9, 10**9 - 10000, -7))  # strictly decreasing
+    monkeypatch.setattr(store_mod.time, "time", lambda: float(next(skewed)))
+    store = ArtifactStore(str(tmp_path))
+    keys = []
+    for seed in range(3):
+        art = _unmapped(seed=seed)
+        keys.append(key_for(art))
+        store.put(art)
+    one_size = store.total_bytes() // 3
+    store.get(keys[0])  # most recently USED, oldest by (skewed) wall clock
+    rows = {d: r for d, r in store.index().items()}
+    assert rows[keys[0].digest]["seq"] == max(r["seq"] for r in rows.values())
+    evicted = store.gc(max_bytes=one_size + 8)
+    assert evicted == 2
+    left = store.ls()
+    assert len(left) == 1 and left[0]["key"] == keys[0].to_json()
+
+
+def test_lru_seq_persists_across_processes_and_reconciles(tmp_path):
+    """seq is persisted in the index and advances across store instances
+    (read-modify-write under the index lock); the hot-path incremental
+    reconcile keeps existing stamps."""
+    a = ArtifactStore(str(tmp_path))
+    k0 = key_for(_unmapped(seed=0))
+    a.put(_unmapped(seed=0))
+    a.put(_unmapped(seed=1))
+    with open(a.index_path) as f:
+        rows = json.load(f)["entries"]
+    seqs = sorted(int(r["seq"]) for r in rows.values())
+    assert seqs == [1, 2]
+
+    b = ArtifactStore(str(tmp_path))  # fresh instance, same on-disk index
+    b.get(k0)
+    b.put(_unmapped(seed=2))  # reconcile path: index trails by one entry
+    with open(b.index_path) as f:
+        rows = json.load(f)["entries"]
+    assert int(rows[k0.digest]["seq"]) == 3  # the get stamped it
+    assert max(int(r["seq"]) for r in rows.values()) == 4  # the new put
+    # ls orders by seq, newest stamp first
+    ls = b.ls()
+    assert int(ls[0]["seq"]) == 4 and int(ls[1]["seq"]) == 3
+
+
+def test_lru_rows_without_seq_evict_first(tmp_path):
+    """Rows rebuilt from a pre-seq index (seq missing -> 0) are treated as
+    least-recently-used: they evict before any stamped row."""
+    store = ArtifactStore(str(tmp_path))
+    old_key = key_for(_unmapped(seed=0))
+    store.put(_unmapped(seed=0))
+    store.put(_unmapped(seed=1))
+
+    # simulate a pre-seq index row for seed=0
+    with open(store.index_path) as f:
+        data = json.load(f)
+    del data["entries"][old_key.digest]["seq"]
+    atomic_write_json(store.index_path, data)
+
+    one_size = store.total_bytes() // 2
+    store.gc(max_bytes=one_size + 8)
+    left = store.ls()
+    assert len(left) == 1
+    assert left[0]["key"]["seed"] == 1  # the stamped row survived

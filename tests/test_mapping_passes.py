@@ -1,0 +1,175 @@
+"""The repro.mapping pass-pipeline package: layering, compat shim, per-pass
+stats, and the selective-by-default pathfinder.
+
+Covers the decomposition contract of PR 5:
+
+* every mapper resolves through the registry as a pass composition
+  (``build_passes``) and reports uniform per-pass timings/counters;
+* ``repro.core.mapper`` stays a faithful compat shim (same objects, not
+  copies);
+* per-pass stats flow into ``CompileResult.pass_stats``, round-trip
+  through artifacts, and show in the CLI inspect output;
+* ``pathfinder`` defaults to selective negotiation with ``full`` still
+  selectable (behavior guarded by the goldens + A/B gate in
+  test_placement_engine.py).
+"""
+import json
+
+import pytest
+
+import repro.core.mapper as shim
+import repro.mapping as mapping_pkg
+from repro.compiler import compile
+from repro.compiler.artifact import CompileResult
+from repro.compiler.pipeline import job_grid, list_mappers
+from repro.compiler.registry import MAPPERS
+from repro.core.arch import make_arch
+from repro.mapping import (
+    HierarchicalMapper,
+    PathFinderMapper2,
+    PathFinderSelectiveMapper,
+    PipelineMapper,
+    SAMapper,
+)
+from repro.mapping.passes.base import MapperPass
+
+
+# -- compat shim -------------------------------------------------------------
+
+
+def test_shim_exports_are_the_package_objects():
+    """The shim re-exports the very same objects (no copies, no wrappers):
+    isinstance checks and registry identity keep working across both
+    import paths."""
+    for name in ("MRRG", "Mapping", "MapperStats", "RouteStats",
+                 "route_edge", "start_resources", "min_span",
+                 "motif_templates", "Unit", "SAMapper", "PathFinderMapper",
+                 "HierarchicalMapper", "NodeGreedyMapper",
+                 "PathFinderMapper2", "PathFinderSelectiveMapper"):
+        assert getattr(shim, name) is getattr(mapping_pkg, name), name
+    assert shim._BaseMapper is mapping_pkg.PipelineMapper
+    assert shim._DfgTables is mapping_pkg.DfgTables
+
+
+def test_registry_resolves_to_pass_compositions():
+    """Every registered non-spatial mapper is a PipelineMapper whose
+    pipeline is a non-empty tuple of MapperPass instances."""
+    arch = make_arch("plaid2x2")
+    for name in list_mappers():
+        if MAPPERS.meta(name).get("result") == "spatial":
+            continue
+        m = MAPPERS.get(name)(arch, seed=0)
+        assert isinstance(m, PipelineMapper), name
+        assert m._passes and all(isinstance(p, MapperPass)
+                                 for p in m._passes), name
+
+
+# -- per-pass stats ----------------------------------------------------------
+
+
+def test_engine_stats_reports_pass_rows(workload_dfg):
+    g = workload_dfg("atax", 2)
+    m = HierarchicalMapper(make_arch("plaid2x2"), seed=0, time_budget=600)
+    m.restarts = 4
+    assert m.map(g) is not None
+    st = m.engine_stats()
+    rows = {r["name"]: r for r in st["passes"]}
+    assert set(rows) >= {"extract", "place", "finalize"}
+    for r in rows.values():
+        assert r["wall_s"] >= 0.0 and r["calls"] >= 1
+    # pass rows accumulate across II attempts: extract ran once per
+    # map_at_ii, finalize only on the II that succeeded
+    assert rows["extract"]["calls"] >= rows["finalize"]["calls"] == 1
+
+
+def test_pathfinder_pass_rows_split_place_and_negotiate(workload_dfg):
+    g = workload_dfg("atax", 2)
+    m = PathFinderMapper2(make_arch("plaid2x2"), seed=0, time_budget=600)
+    assert m.map(g) is not None
+    rows = {r["name"]: r for r in m.engine_stats()["passes"]}
+    assert set(rows) >= {"extract", "place", "negotiate"}
+
+
+def test_pass_stats_roundtrip_in_artifact(tmp_path):
+    res = compile("atax", unroll=2, arch="plaid2x2", mapper="hierarchical")
+    assert res.pass_stats, "repro.mapping pipelines must report pass stats"
+    names = [p["name"] for p in res.pass_stats]
+    assert names[0] == "extract" and "place" in names
+    loaded = CompileResult.load(res.save(str(tmp_path / "a.json")))
+    assert loaded.pass_stats == res.pass_stats
+    assert loaded.summary()["passes"] == res.pass_stats
+    # pre-pass-pipeline schemas load with pass_stats absent
+    data = loaded.to_json()
+    data["schema"] = "repro.compiler/artifact@2"
+    del data["pass_stats"]
+    p = tmp_path / "v2.json"
+    p.write_text(json.dumps(data))
+    assert CompileResult.load(str(p)).pass_stats is None
+
+
+def test_inspect_prints_pass_breakdown(tmp_path, capsys):
+    from repro.compiler.cli import main
+
+    res = compile("atax", unroll=2, arch="plaid2x2", mapper="hierarchical")
+    art = str(tmp_path / "a.json")
+    res.save(art)
+    assert main(["inspect", art]) == 0
+    out = capsys.readouterr().out
+    assert "passes[" in out and "extract=" in out and "place=" in out
+
+
+# -- selective-by-default pathfinder ----------------------------------------
+
+
+def test_pathfinder_defaults_to_selective():
+    m = PathFinderMapper2(make_arch("plaid2x2"), seed=0)
+    assert m.negotiation == "selective"
+    assert m.route_cache_scoped is True
+    full = PathFinderMapper2(make_arch("plaid2x2"), seed=0,
+                             negotiation="full")
+    assert full.negotiation == "full" and full.route_cache_scoped is False
+    assert PathFinderSelectiveMapper(make_arch("plaid2x2"),
+                                     seed=0).negotiation == "selective"
+    # the registered grid mapper is the selective-by-default class
+    arch_name, mapper_name = job_grid()["pf_on_plaid"]
+    assert MAPPERS.get(mapper_name) is PathFinderMapper2
+
+
+def test_selective_default_matches_selective_golden(workload_dfg):
+    """The flipped default must land exactly on the selective golden (the
+    explicit-selective construction path is already golden-gated)."""
+    import os
+
+    golden_path = os.path.join(os.path.dirname(__file__),
+                               "golden_ii_quick_selective.json")
+    with open(golden_path) as f:
+        golden = json.load(f)
+    g = workload_dfg("atax", 2)
+    m = PathFinderMapper2(make_arch("plaid2x2"), seed=0)
+    r = m.map(g)
+    want = golden["atax_u2"]["pf_on_plaid"]
+    assert r is not None and r.ii <= want
+
+
+# -- config read-through -----------------------------------------------------
+
+
+def test_config_overrides_after_construction(workload_dfg):
+    """restarts/time_budget tuned on the instance after construction must
+    reach the passes (the context reads config at use time)."""
+    g = workload_dfg("atax", 2)
+    a = SAMapper(make_arch("st4x4"), seed=0)
+    a.time_budget = 50
+    b = SAMapper(make_arch("st4x4"), seed=0, time_budget=50)
+    ra, rb = a.map(g), b.map(g)
+    assert (ra is None) == (rb is None)
+    if ra is not None:
+        assert (ra.ii, ra.place, ra.time) == (rb.ii, rb.place, rb.time)
+
+
+def test_mapper_failure_returns_none_not_partial(workload_dfg):
+    """An infeasible II returns None — a FAIL from any pass propagates out
+    of the pipeline driver instead of handing out a partial mapping."""
+    g = workload_dfg("atax", 2)
+    m = HierarchicalMapper(make_arch("plaid2x2"), seed=0, time_budget=600)
+    assert m.map_at_ii(g, 1) is None  # golden II is 3; 1 cannot place

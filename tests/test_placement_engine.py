@@ -166,10 +166,10 @@ def test_route_cache_hit_determinism_at_fixed_seed(workload_dfg):
 # ---------------------------------------------------------------------------
 
 
-def _map_with_ordering(cls, arch_name, dfg, ordering):
+def _map_with_ordering(cls, arch_name, dfg, ordering, **kw):
     cls.candidate_ordering = ordering
     try:
-        m = cls(make_arch(arch_name), seed=0, time_budget=600)
+        m = cls(make_arch(arch_name), seed=0, time_budget=600, **kw)
         m.restarts = 4
         return m.map(dfg)
     finally:
@@ -203,11 +203,14 @@ def test_ordering_equivalence_node_greedy(name, unroll, workload_dfg):
 
 @pytest.mark.parametrize("name,unroll", [("atax", 2), ("gemver", 2)])
 def test_ordering_equivalence_pathfinder_full(name, unroll, workload_dfg):
-    """The default ("full") negotiation mode must be unaffected by the
-    ordering switch — selective is the only mode allowed to diverge."""
+    """The "full" negotiation mode must be unaffected by the ordering
+    switch — selective (the default since it became the pathfinder
+    default) is the only mode allowed to diverge, so pin full here."""
     g = workload_dfg(name, unroll)
-    a = _map_with_ordering(PathFinderMapper2, "plaid2x2", g, True)
-    b = _map_with_ordering(PathFinderMapper2, "plaid2x2", g, False)
+    a = _map_with_ordering(PathFinderMapper2, "plaid2x2", g, True,
+                           negotiation="full")
+    b = _map_with_ordering(PathFinderMapper2, "plaid2x2", g, False,
+                           negotiation="full")
     _assert_bit_identical(a, b, f"{name}_u{unroll}/pathfinder-full")
 
 

@@ -59,3 +59,38 @@ def test_node_greedy_st_matches_golden(name, unroll, workload_dfg):
     g = workload_dfg(name, unroll)
     m = _full_budget(NodeGreedyMapper(make_arch("st4x4"), seed=0)).map(g)
     _check(f"{name}_u{unroll}", "st", m)
+
+
+# -- full-TABLE2 golden (collected non-quick on the pinned 2-CPU machine) ----
+
+GOLDEN_FULL = os.path.join(os.path.dirname(__file__), "golden_ii_full.json")
+
+with open(GOLDEN_FULL) as _f:
+    _GOLDEN_FULL_II = json.load(_f)
+
+
+def test_full_golden_covers_the_whole_table2_grid():
+    """tests/golden_ii_full.json holds one II per (workload, grid job) for
+    the complete TABLE2 — the record a full (non-quick) collect diffs
+    against via `plaid-compile diff --golden tests/golden_ii_full.json`."""
+    from repro.compiler.pipeline import job_grid
+    from repro.core.collect import mapper_jobs
+    from repro.core.workloads import TABLE2
+
+    keys = {f"{w.name}_u{w.unroll}" for w in TABLE2}
+    assert set(_GOLDEN_FULL_II) == keys
+    jobs = set(mapper_jobs())
+    for key, rec in _GOLDEN_FULL_II.items():
+        assert set(rec) == jobs, key
+
+
+def test_full_golden_consistent_with_quick_golden():
+    """On the quick slice the full-table record must be no worse than the
+    quick golden in every cell (pf cells were collected with the selective
+    default, which is II-equal to full negotiation on the quick slice)."""
+    for key, rec in _GOLDEN_II.items():
+        for job, want in rec.items():
+            if want is None:
+                continue
+            got = _GOLDEN_FULL_II[key][job]
+            assert got is not None and got <= want, (key, job, want, got)

@@ -1,0 +1,171 @@
+"""Spatial partitioner unit coverage (prep for a future vectorized
+partitioner — these pin the greedy's contract).
+
+Direct tests of ``repro.core.spatial._partition`` / ``_replicable`` /
+``_segment_dfg``: replicable address-chain handling (rematerialization
+instead of SPM round-trips), ``mem_cap`` exhaustion (refusal instead of an
+over-memory segment), and degenerate single-segment DFGs.
+"""
+import pytest
+
+from repro.core.dfg import DFG
+from repro.core.spatial import _partition, _replicable, _segment_dfg
+
+
+def _chain_dfg(n_chains=2, chain_len=3):
+    """n independent load->mul->...->store chains."""
+    g = DFG("chains")
+    for c in range(n_chains):
+        ld = g.add("load", f"ld{c}")
+        prev = ld
+        for i in range(chain_len):
+            prev = g.add("mul", f"m{c}_{i}", [prev])
+        g.add("store", f"st{c}", [prev])
+    return g
+
+
+def _addr_chain_dfg():
+    """A compute-only address chain feeding consumers in two different
+    slices: const -> add -> shl is replicable (no loads, no recurrences)."""
+    g = DFG("addr")
+    c0 = g.add("const", "c0")
+    a = g.add("add", "addr", [c0, c0])
+    s = g.add("shl", "addr2", [a, c0])
+    # two consumers, each with its own load/store so segments must split
+    for i in range(2):
+        ld = g.add("load", f"ld{i}")
+        m = g.add("mul", f"m{i}", [s, ld])
+        g.add("store", f"st{i}", [m])
+    return g, s
+
+
+# -- _replicable -------------------------------------------------------------
+
+
+def test_replicable_address_chain():
+    g, s = _addr_chain_dfg()
+    memo = {}
+    assert _replicable(g, s, memo)  # const-fed compute chain: rematerialize
+    # loads are never replicable
+    ld = next(n for n, node in g.nodes.items() if node.op == "load")
+    assert not _replicable(g, ld, memo)
+
+
+def test_replicable_blocked_by_recurrence():
+    g = DFG("rec")
+    c = g.add("const", "c")
+    acc = g.add("add", "acc", [c])
+    g.connect(acc, acc, distance=1)  # loop-carried: must not be cloned
+    assert not _replicable(g, acc, {})
+
+
+def test_replicable_blocked_by_load_input():
+    g = DFG("mix")
+    ld = g.add("load", "ld")
+    a = g.add("add", "a", [ld, ld])
+    assert not _replicable(g, a, {})
+
+
+# -- _partition --------------------------------------------------------------
+
+
+def test_single_segment_degenerate_dfg():
+    """A DFG that fits one segment partitions to exactly one segment
+    holding every executable node (consts excluded)."""
+    g = DFG("tiny")
+    c = g.add("const", "c")
+    a = g.add("add", "a", [c, c])
+    st = g.add("store", "st", [a])
+    parts = _partition(g, max_nodes=16, mem_cap=3)
+    assert parts is not None and len(parts) == 1
+    assert sorted(parts[0]) == [a, st]
+
+
+def test_partition_excludes_const_and_input_nodes():
+    g, _ = _addr_chain_dfg()
+    parts = _partition(g, max_nodes=32, mem_cap=4)
+    assert parts is not None
+    placed = {n for seg in parts for n in seg}
+    for n, node in g.nodes.items():
+        if node.op in ("const", "input"):
+            assert n not in placed
+        else:
+            assert n in placed
+    # every node lands in exactly one segment
+    assert len(placed) == sum(len(seg) for seg in parts)
+
+
+def test_partition_respects_mem_cap():
+    g = _chain_dfg(n_chains=3, chain_len=2)  # 3 loads + 3 stores
+    parts = _partition(g, max_nodes=4, mem_cap=2)
+    if parts is None:
+        pytest.skip("caps unsatisfiable at this size — covered below")
+    is_mem = lambda n: g.nodes[n].op in ("load", "store")
+    for seg in parts:
+        assert sum(1 for n in seg if is_mem(n)) <= 4  # hard mem-PE limit
+
+
+def test_partition_mem_cap_exhaustion_returns_none():
+    """A recurrence-closed group whose memory ops exceed the cap can never
+    be placed (groups are atomic): the partitioner must refuse (None) so
+    the caller can retry or fall back to the analytic model, not emit an
+    over-memory segment."""
+    g = DFG("memheavy")
+    loads = [g.add("load", f"ld{i}") for i in range(4)]
+    acc = g.add("add", "acc", loads[:2])
+    for ld in loads[2:]:
+        g.connect(ld, acc)
+    g.connect(acc, acc, distance=1)
+    for ld in loads:  # close the loads into acc's recurrence group
+        g.connect(acc, ld, distance=1)
+    assert _partition(g, max_nodes=16, mem_cap=2) is None
+
+
+def test_partition_segments_respect_dependency_order():
+    """Producer-following packing invariant: a node never lands in an
+    earlier segment than any of its producers (segment order is acyclic, so
+    cut values always flow forward through the SPM)."""
+    g = _chain_dfg(n_chains=2, chain_len=3)
+    parts = _partition(g, max_nodes=5, mem_cap=3)
+    assert parts is not None and len(parts) >= 2  # cannot fit one segment
+    seg_of = {n: i for i, seg in enumerate(parts) for n in seg}
+    for e in g.intra_edges():
+        if e.src in seg_of and e.dst in seg_of:
+            assert seg_of[e.src] <= seg_of[e.dst], (e.src, e.dst)
+    # node-capacity bound holds for every segment
+    assert all(len(seg) <= 5 for seg in parts)
+
+
+# -- _segment_dfg ------------------------------------------------------------
+
+
+def test_segment_dfg_rematerializes_replicable_chain():
+    """Cut edges from a replicable address chain clone the chain into the
+    consuming segment (zero SPM round-trips); non-replicable cuts become
+    store/load pairs."""
+    g, s = _addr_chain_dfg()
+    exec_nodes = [n for n, node in g.nodes.items()
+                  if node.op not in ("const", "input")]
+    consumer = [n for n in exec_nodes
+                if g.nodes[n].name in ("ld1", "m1", "st1")]
+    sub, extra = _segment_dfg(g, consumer, tag=1)
+    assert extra == 0  # address chain cloned, not round-tripped
+    ops = [node.op for node in sub.nodes.values()]
+    assert ops.count("load") == 1  # only the chain's own load
+    assert "add" in ops and "shl" in ops  # the cloned chain
+
+
+def test_segment_dfg_cut_edge_becomes_store_load_pair():
+    g = DFG("cut")
+    ld = g.add("load", "ld")
+    a = g.add("mul", "a", [ld, ld])
+    b = g.add("mul", "b", [a])  # one cut edge a -> b
+    st = g.add("store", "st", [b])
+    sub1, extra1 = _segment_dfg(g, [ld, a], tag=0)
+    sub2, extra2 = _segment_dfg(g, [b, st], tag=1)
+    # producer side stores the cut value once; consumer side loads it once
+    assert extra1 == 1 and extra2 == 1
+    assert any(n.op == "store" and n.name.startswith("cut_st")
+               for n in sub1.nodes.values())
+    assert any(n.op == "load" and n.name.startswith("cut_ld")
+               for n in sub2.nodes.values())
