@@ -71,6 +71,41 @@ assert last["misses"] == 0 and last["hit_rate"] == 1.0, f"warm pass not 100% hit
 print(f"store roundtrip OK: {last['hits']} hits / 0 misses, II+cycles identical")
 EOF
 
+echo "== chaos gate: injected crash+hang must record failures, then heal =="
+CHAOS_OUT=$(mktemp /tmp/ci_chaos.XXXXXX.json); rm -f "$CHAOS_OUT"
+CHAOS_BENCH=$(mktemp /tmp/ci_chaos_bench.XXXXXX.json); rm -f "$CHAOS_BENCH"
+# one worker crashes like an OOM kill (both attempts), one cell hangs past
+# its --cell-timeout: the sweep must still complete (exit 0) with both
+# cells recorded as structured failures instead of aborting
+REPRO_FAULTS='[{"mode": "crash", "site": "worker", "match": "atax_u2/plaid", "attempts": [0, 1]},
+               {"mode": "hang", "site": "worker", "match": "atax_u2/st", "seconds": 120}]' \
+timeout "$BUDGET" python -m repro.core.collect --quick --workloads atax_u2 \
+    --out "$CHAOS_OUT" --bench-out "$CHAOS_BENCH" --cell-timeout 20 --jobs 2
+python - "$CHAOS_OUT" <<'EOF'
+import json, sys
+rec = json.load(open(sys.argv[1]))["atax_u2"]
+f = rec["failures"]
+assert f["plaid"]["error"] == "WorkerCrashed" and f["plaid"]["attempts"] == 2, f
+assert f["st"]["error"] == "CompileTimeout", f
+assert rec["ii"]["plaid"] is None and rec["ii"]["st"] is None, rec["ii"]
+assert rec["partial_parts"], "successful cells must ride along for the resume"
+print(f"chaos gate: {len(f)} injected failures recorded, sweep completed")
+EOF
+# a clean re-run against the same --out re-attempts ONLY the failed cells
+# and must heal the record back to the golden IIs (strict: no failures left)
+timeout "$BUDGET" python -m repro.core.collect --quick --workloads atax_u2 \
+    --out "$CHAOS_OUT" --bench-out "$CHAOS_BENCH" --strict
+python - "$CHAOS_OUT" <<'EOF'
+import json, sys
+rec = json.load(open(sys.argv[1]))["atax_u2"]
+assert "failures" not in rec and "partial_parts" not in rec, "record not healed"
+golden = json.load(open("tests/golden_ii_quick.json"))["atax_u2"]
+for job, want in golden.items():
+    assert rec["ii"][job] == want, (job, rec["ii"][job], want)
+assert rec["verified"] == {"plaid": True, "st": True}, rec["verified"]
+print("chaos gate: torn grid healed bit-identically to golden")
+EOF
+
 echo "== perf smoke: quick wall time vs last recorded run =="
 python scripts/perf_smoke.py BENCH_mapper.json --max-ratio 2.0
 

@@ -36,6 +36,16 @@ _LAZY = {
     "ArtifactStore": ("repro.compiler.store", "ArtifactStore"),
     "CompileKey": ("repro.compiler.store", "CompileKey"),
     "StoreIntegrityError": ("repro.compiler.store", "StoreIntegrityError"),
+    # the failure taxonomy (repro.compiler.errors is leaf-level, but routing
+    # through the lazy table keeps this __init__ import-cycle-proof)
+    "CompileError": ("repro.compiler.errors", "CompileError"),
+    "MappingInfeasible": ("repro.compiler.errors", "MappingInfeasible"),
+    "CompileTimeout": ("repro.compiler.errors", "CompileTimeout"),
+    "WorkerCrashed": ("repro.compiler.errors", "WorkerCrashed"),
+    "StoreIOError": ("repro.compiler.errors", "StoreIOError"),
+    "ArtifactError": ("repro.compiler.errors", "ArtifactError"),
+    "LockTimeout": ("repro.compiler.errors", "LockTimeout"),
+    "exit_code_for": ("repro.compiler.errors", "exit_code_for"),
     # registry lookups go through the pipeline module so that the built-in
     # mappers/arches are registered before the first query
     "get_mapper": ("repro.compiler.pipeline", "get_mapper"),

@@ -12,12 +12,12 @@ the configuration against the DFG oracle — **without re-running place &
 route**.  This is what lets a results cache / serving tier hand out mappings
 and still prove them correct on the consumer side.
 
-Schema (``repro.compiler/artifact@3``; ``@1``/``@2`` artifacts still load —
-``route_cache``, the place/route/negotiate timing keys, and the uniform
-per-pass stats are simply absent)::
+Schema (``repro.compiler/artifact@4``; ``@1``–``@3`` artifacts still load —
+``route_cache``, the place/route/negotiate timing keys, the uniform
+per-pass stats, and the ``degraded`` provenance block are simply absent)::
 
     {
-      "schema":   "repro.compiler/artifact@3",
+      "schema":   "repro.compiler/artifact@4",
       "workload": {"name", "unroll", "iterations", "domain"}
                   | {"dfg_name", "iterations", "dfg_sha256"},  # raw-DFG input
       "arch":     "plaid2x2",          # registered arch name
@@ -38,8 +38,18 @@ per-pass stats are simply absent)::
                     "makespan"}],      # one per segment (spatial) else one
       "spatial":  {"segments", "extra_mem_ops", "analytic"} | null,
       "verified": true | false | null, # null = verification not requested
+      "degraded": null | {             # graceful-degradation provenance:
+          "requested_mapper": str,     #   the mapper the caller asked for
+          "fallback": str,             #   the mapper that actually ran
+          "reason": "timeout" | "infeasible",
+          "deadline_s": s, "elapsed_s": s, "where": str},  # timeout leg only
       "provenance": {"created_utc", "repro_version"}
     }
+
+A non-null ``degraded`` block means ``mapper`` names the **fallback** that
+produced the stored mapping, not the mapper the caller requested; degraded
+artifacts are never inserted into the artifact store (their compile key
+names the requested mapper).
 
 ``place``/``time``/``routes`` keys are node / edge indices (stringified by
 JSON; restored to ``int`` on load).
@@ -52,12 +62,13 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-ARTIFACT_SCHEMA = "repro.compiler/artifact@3"
+ARTIFACT_SCHEMA = "repro.compiler/artifact@4"
 #: schemas ``load()`` accepts; @1 predates the placement engine (PR 3) and
 #: simply lacks route_cache / the per-stage P&R timing keys, @2 predates
-#: the repro.mapping pass pipeline (PR 5) and lacks the per-pass stats
+#: the repro.mapping pass pipeline (PR 5) and lacks the per-pass stats,
+#: @3 predates graceful degradation (PR 6) and lacks the degraded block
 SUPPORTED_SCHEMAS = ("repro.compiler/artifact@1", "repro.compiler/artifact@2",
-                     ARTIFACT_SCHEMA)
+                     "repro.compiler/artifact@3", ARTIFACT_SCHEMA)
 # 0.4.0: mapper decomposition into repro.mapping + pathfinder negotiation
 # default flipped to "selective" (a mapper-behavior change: store keys must
 # namespace away from 0.3.x artifacts)
@@ -146,6 +157,9 @@ class CompileResult:
     mappings: List[Dict[str, object]] = field(default_factory=list)
     spatial: Optional[Dict[str, object]] = None
     verified: Optional[bool] = None
+    #: graceful-degradation provenance (see module docstring); non-null
+    #: means ``mapper`` is the fallback that ran, not the requested mapper
+    degraded: Optional[Dict[str, object]] = None
     provenance: Dict[str, object] = field(default_factory=dict)
     route_cache: Optional[Dict[str, object]] = None
     #: uniform per-pass breakdown from the repro.mapping pipeline: one row
@@ -189,6 +203,7 @@ class CompileResult:
             "mappings": self.mappings,
             "spatial": self.spatial,
             "verified": self.verified,
+            "degraded": self.degraded,
             "provenance": self.provenance,
             "route_cache": self.route_cache,
             "pass_stats": self.pass_stats,
@@ -217,6 +232,7 @@ class CompileResult:
             mappings=mappings,
             spatial=data.get("spatial"),
             verified=data.get("verified"),
+            degraded=data.get("degraded"),
             provenance=data.get("provenance") or {},
             route_cache=data.get("route_cache"),
             pass_stats=data.get("pass_stats"),
@@ -246,10 +262,13 @@ class CompileResult:
         reference oracle; returns the per-(node, iteration) value dict of
         each mapping.  Raises if no routed mapping was stored (mapper
         failure, or the spatial analytic fallback)."""
+        from repro.compiler.errors import MappingInfeasible
         from repro.core.simulate import simulate as _simulate
 
         if not self.mappings:
-            raise ValueError(
+            # MappingInfeasible subclasses ValueError, so pre-taxonomy
+            # handlers (and VERIFY_FAILURES) keep catching this
+            raise MappingInfeasible(
                 f"artifact {self.key}/{self.mapper} holds no routed mapping "
                 "to simulate"
             )
@@ -279,6 +298,8 @@ class CompileResult:
             out["motifs"] = self.motifs
         if self.spatial:
             out["spatial"] = self.spatial
+        if self.degraded:
+            out["degraded"] = self.degraded
         return out
 
 

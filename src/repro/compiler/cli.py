@@ -43,6 +43,11 @@ from repro.compiler.artifact import (
     SUPPORTED_SCHEMAS,
     CompileResult,
 )
+from repro.compiler.errors import (
+    VERIFY_FAILURES,
+    CompileError,
+    exit_code_for,
+)
 from repro.compiler.pipeline import (
     compile_key,
     compile_workload,
@@ -50,7 +55,7 @@ from repro.compiler.pipeline import (
     list_archs,
     list_mappers,
 )
-from repro.compiler.registry import MAPPERS
+from repro.compiler.registry import MAPPERS, RegistryError
 from repro.compiler.store import (
     VERIFY_POLICIES,
     ArtifactStore,
@@ -199,9 +204,14 @@ def _compile_one(args, arch: str, mapper: str, job: Optional[str],
         iterations=args.iterations,
         verify=args.verify,
         store=store,
+        deadline_s=args.deadline_s,
+        fallback_mapper=args.fallback_mapper,
     )
     tag = job or f"{mapper}@{arch}"
     status = f"II={res.ii}" if res.ii is not None else "UNMAPPED"
+    if res.degraded:
+        status += (f" DEGRADED({res.degraded['reason']} -> "
+                   f"{res.degraded['fallback']})")
     if res.spatial:
         status += f" segments={res.spatial['segments']}"
     if res.verified is not None:
@@ -291,10 +301,15 @@ def _cmd_inspect(args) -> int:
                 art.simulate(iterations=args.iterations)
                 print(f"{path}: re-simulated {len(art.mappings)} mapping(s) "
                       "against the DFG oracle OK (no P&R re-run)")
-            except Exception as e:
-                # corrupt artifacts surface as AssertionError from
-                # Mapping.validate()/simulate(), but mangled records can
-                # also raise KeyError/TypeError — all mean 'not verified'
+            except VERIFY_FAILURES as e:
+                # the taxonomy's bounded disproven-mapping list: corrupt
+                # artifacts surface as AssertionError from
+                # Mapping.validate()/simulate(), mangled records as
+                # KeyError/TypeError/... — all mean 'not verified'.
+                # Anything outside the list is a real bug and propagates
+                # (main() renders it; --debug shows the full traceback).
+                if getattr(args, "debug", False):
+                    raise
                 print(f"{path}: VERIFY FAILED: {type(e).__name__}: {e}")
                 rc = 1
     return rc
@@ -397,10 +412,15 @@ def _cmd_store_put(args) -> int:
     for path in args.artifacts:
         try:
             res = CompileResult.load(path)
-        # structurally mangled JSON surfaces as KeyError/AttributeError/
-        # TypeError from from_json, not just OSError/ValueError — any of
-        # them means "skip this file, keep going"
-        except Exception as e:
+        # the bounded not-a-loadable-artifact list: structurally mangled
+        # JSON surfaces as KeyError/AttributeError/TypeError/IndexError
+        # from from_json, unreadable files as OSError, bad schemas as
+        # ValueError (incl. ArtifactError) — each means "skip this file,
+        # keep going".  Anything else is a real bug and propagates.
+        except (OSError, ValueError, KeyError, TypeError, AttributeError,
+                IndexError) as e:
+            if getattr(args, "debug", False):
+                raise
             print(f"{path}: not a loadable artifact "
                   f"({type(e).__name__}: {e})", file=sys.stderr)
             rc = 1
@@ -498,6 +518,10 @@ def build_parser() -> argparse.ArgumentParser:
         prog="plaid-compile",
         description="Unified Plaid CGRA compile pipeline",
     )
+    ap.add_argument("--debug", action="store_true",
+                    help="re-raise failures with full tracebacks instead of "
+                         "rendering them as exit codes (place before the "
+                         "subcommand)")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     sub.add_parser("list", help="registered mappers/arches and the job grid")
@@ -524,6 +548,14 @@ def build_parser() -> argparse.ArgumentParser:
     c.add_argument("--store", default=None, metavar="DIR",
                    help="artifact store: serve a cached mapping without "
                         "P&R, insert on miss")
+    c.add_argument("--deadline-s", type=float, default=None, metavar="S",
+                   help="wall-clock P&R deadline; exceeding it raises "
+                        "CompileTimeout (exit code 12) unless "
+                        "--fallback-mapper is given")
+    c.add_argument("--fallback-mapper", default=None, metavar="NAME",
+                   help="degrade gracefully: on timeout/infeasibility, "
+                        "re-run with this mapper and stamp the artifact "
+                        "as degraded instead of failing")
 
     i = sub.add_parser("inspect", help="summarize (and optionally re-verify)")
     i.add_argument("artifacts", nargs="+")
@@ -590,14 +622,34 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv: Optional[List[str]] = None) -> int:
+    """Exit codes: 0 success, 1 generic failure (verify failed, regression,
+    miss), 2 usage error.  Taxonomy failures map to distinct codes 10+
+    (``repro.compiler.errors``): 10 CompileError, 11 MappingInfeasible,
+    12 CompileTimeout, 13 WorkerCrashed, 14 StoreIOError, 15 ArtifactError,
+    16 LockTimeout — so shell callers can branch on *what* failed.
+    ``--debug`` re-raises instead, preserving the full traceback."""
     args = build_parser().parse_args(argv)
-    return {
+    handler = {
         "list": _cmd_list,
         "compile": _cmd_compile,
         "inspect": _cmd_inspect,
         "diff": _cmd_diff,
         "store": _cmd_store,
-    }[args.cmd](args)
+    }[args.cmd]
+    try:
+        return handler(args)
+    except CompileError as e:
+        if args.debug:
+            raise
+        print(f"error: {type(e).__name__}: {e}", file=sys.stderr)
+        for k, v in (e.to_json().get("details") or {}).items():
+            print(f"  {k}: {v}", file=sys.stderr)
+        return exit_code_for(e)
+    except RegistryError as e:
+        if args.debug:
+            raise
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
 
 if __name__ == "__main__":

@@ -15,18 +15,27 @@ them without cycles:
   equally, regardless of dict insertion order or indentation.
 * :func:`locked` — an advisory exclusive lock (``fcntl.flock``) held on a
   sidecar ``<path>.lock`` file for the duration of a read-modify-write.
-  On platforms without ``fcntl`` it degrades to a no-op (the atomic
-  replace still guarantees per-file integrity, just not lost-update
-  protection).
+  With ``timeout_s`` set, a lock that cannot be acquired in time raises
+  :class:`~repro.compiler.errors.LockTimeout` instead of blocking forever
+  behind a dead lock-holder.  On platforms without ``fcntl`` it degrades
+  to a no-op (the atomic replace still guarantees per-file integrity,
+  just not lost-update protection).
+
+This module stays leaf-level: stdlib plus the (equally leaf-level) error
+taxonomy, so every layer can import it without cycles.
 """
 from __future__ import annotations
 
+import errno
 import hashlib
 import json
 import os
 import tempfile
+import time
 from contextlib import contextmanager
 from typing import Dict, Optional
+
+from repro.compiler.errors import LockTimeout
 
 try:  # POSIX; the no-op fallback keeps imports working elsewhere
     import fcntl
@@ -80,12 +89,18 @@ def sha256_of_json(obj: object) -> str:
 
 
 @contextmanager
-def locked(path: str):
+def locked(path: str, timeout_s: Optional[float] = None):
     """Exclusive advisory lock on ``<path>.lock`` for a read-modify-write.
 
     Lock the *sidecar*, never the data file: the data file is swapped out
     from under its inode by ``os.replace``, which would silently break
     ``flock`` on it.
+
+    ``timeout_s`` bounds the wait: ``None`` blocks indefinitely (the
+    pre-existing behaviour); otherwise the lock is polled non-blockingly
+    and :class:`~repro.compiler.errors.LockTimeout` is raised once the
+    budget is spent — a worker that died (or hung) while holding the lock
+    must not strand every later writer forever.
     """
     if fcntl is None:  # pragma: no cover - non-POSIX platforms
         yield
@@ -95,7 +110,25 @@ def locked(path: str):
     if d:
         os.makedirs(d, exist_ok=True)
     with open(lock_path, "a+") as lf:
-        fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+        if timeout_s is None:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+        else:
+            deadline = time.monotonic() + timeout_s
+            while True:
+                try:
+                    fcntl.flock(lf.fileno(), fcntl.LOCK_EX | fcntl.LOCK_NB)
+                    break
+                except OSError as e:
+                    if e.errno not in (errno.EAGAIN, errno.EACCES,
+                                       errno.EWOULDBLOCK):
+                        raise
+                    if time.monotonic() >= deadline:
+                        raise LockTimeout(
+                            f"could not acquire {lock_path} within "
+                            f"{timeout_s}s (dead or hung lock-holder?)",
+                            lock_path=lock_path, timeout_s=timeout_s,
+                        )
+                    time.sleep(0.05)
         try:
             yield
         finally:

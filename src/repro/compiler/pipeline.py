@@ -25,6 +25,7 @@ from __future__ import annotations
 import time
 from typing import Dict, Optional, Tuple, Union
 
+from repro.compiler.errors import VERIFY_FAILURES, CompileTimeout
 from repro.compiler.store import ArtifactStore, CompileKey, open_store
 
 # Importing the mapper/spatial modules populates the mapper/arch registries.
@@ -193,6 +194,9 @@ def compile(
     iterations: Optional[int] = None,
     verify: bool = False,
     store: Optional[Union[str, ArtifactStore]] = None,
+    deadline_s: Optional[float] = None,
+    fallback_mapper: Optional[str] = None,
+    fallback_deadline_s: Optional[float] = None,
 ) -> CompileResult:
     """Run the full pipeline and return a serializable :class:`CompileResult`.
 
@@ -209,7 +213,26 @@ def compile(
     mapper, seed, budget) key is returned without running place & route
     (``result.store_hit`` is ``True``), and a miss is compiled normally
     and inserted.  Determinism makes the hit bit-identical in mapping,
-    II, and cycles to the compile it replaces.
+    II, and cycles to the compile it replaces.  Store I/O failures are
+    survivable: an unreadable store degrades to a cold compile and an
+    unwritable one to an uncached result, each with a warning.
+
+    ``deadline_s`` bounds place & route by wall clock: mappers built on
+    the ``repro.mapping`` pass pipeline check it cooperatively (between
+    passes, SA step blocks, placement restarts, negotiation rounds) and
+    raise :class:`~repro.compiler.errors.CompileTimeout` carrying the
+    partial per-pass stats collected so far.  The checks are pure clock
+    reads — a compile that finishes inside its deadline is bit-identical
+    to one run without it.
+
+    ``fallback_mapper`` turns a timeout or an infeasible primary mapping
+    into **graceful degradation**: the named (typically cheaper) mapper is
+    re-run on the same inputs — with no deadline unless
+    ``fallback_deadline_s`` is given — and the artifact is stamped with a
+    ``degraded`` provenance block (requested mapper, reason, fallback
+    used) instead of raising.  Degraded artifacts are never inserted into
+    the store: the cache must only ever serve what the requested mapper
+    would have produced.
     """
     t0 = time.perf_counter()
     mapper_name = MAPPERS.resolve(mapper)
@@ -231,7 +254,12 @@ def compile(
         store = open_store(store)
         key = CompileKey.make(workload_info, arch_name, mapper_name, seed,
                               budget)
-        cached = store.get(key)
+        try:
+            cached = store.get(key)
+        except OSError as e:  # StoreIOError included — degrade to cold
+            print(f"warning: artifact store read failed ({e}); "
+                  f"compiling without the cache", flush=True)
+            cached = None
         if cached is not None and verify and cached.verified is not True \
                 and cached.mappings:
             # the caller asked for a verification verdict and the stored
@@ -252,7 +280,7 @@ def compile(
                     cached.simulate(iterations=3)
                     cached.verified = True
                     store.mark_verified(key)  # persist: nobody re-runs
-                except Exception:
+                except VERIFY_FAILURES:
                     store.counters.verify_failures += 1
                     store.discard(key)
                     cached = None
@@ -261,11 +289,55 @@ def compile(
             return cached
     t_frontend = time.perf_counter()
 
-    if budget is None:
-        mapper_obj = factory(arch_obj, seed=seed)
-    else:
-        mapper_obj = factory(arch_obj, seed=seed, time_budget=budget)
-    result = mapper_obj.map(dfg)
+    def _pnr(name: str, dl_s: Optional[float]):
+        """Construct the named mapper exactly as the legacy entry points
+        did (determinism contract) and run it, optionally under a
+        cooperative wall-clock deadline."""
+        f = MAPPERS.get(name)
+        if budget is None:
+            m = f(arch_obj, seed=seed)
+        else:
+            m = f(arch_obj, seed=seed, time_budget=budget)
+        if dl_s is not None:
+            set_dl = getattr(m, "set_deadline", None)
+            if set_dl is not None:
+                set_dl(time.monotonic() + dl_s)
+        return m, m.map(dfg)
+
+    degraded: Optional[Dict[str, object]] = None
+    fb_name = (MAPPERS.resolve(fallback_mapper)
+               if fallback_mapper is not None else None)
+    try:
+        mapper_obj, result = _pnr(mapper_name, deadline_s)
+        # graceful degradation, infeasibility leg: the primary mapper
+        # exhausted its II range without a mapping and a fallback exists
+        if (result is None and fb_name is not None
+                and meta.get("result") != "spatial"):
+            degraded = {
+                "requested_mapper": mapper_name,
+                "fallback": fb_name,
+                "reason": "infeasible",
+            }
+    except CompileTimeout as e:
+        e.elapsed_s = e.elapsed_s or (time.perf_counter() - t_frontend)
+        if fb_name is None:
+            raise
+        # graceful degradation, timeout leg: re-run with the (cheaper)
+        # fallback mapper — unbounded unless the caller set a budget for
+        # it too, else a slow fallback would just time out again
+        degraded = {
+            "requested_mapper": mapper_name,
+            "fallback": fb_name,
+            "reason": "timeout",
+            "deadline_s": deadline_s,
+            "elapsed_s": round(e.elapsed_s, 3),
+        }
+        if e.where:
+            degraded["where"] = e.where
+    if degraded is not None:
+        mapper_name = fb_name
+        meta = MAPPERS.meta(fb_name)
+        mapper_obj, result = _pnr(fb_name, fallback_deadline_s)
     t_pnr = time.perf_counter()
 
     # per-stage P&R split + route-cache counters (mappers that predate the
@@ -282,6 +354,7 @@ def compile(
         motifs=_unit_stats(mapper_obj),
         provenance=new_provenance(),
     )
+    out.degraded = degraded
 
     if meta.get("result") == "spatial":
         sp = result
@@ -336,9 +409,16 @@ def compile(
         # a verify-FAILED mapping must never enter the store: serving it
         # later (policy "never") would hand out a disproven mapping, and
         # serving it under verify would quarantine + recompile + re-insert
-        # it forever
-        if out.verified is not False:
-            store.put(out, key=key)
+        # it forever.  A DEGRADED artifact must never enter it either: its
+        # key names the requested mapper, but its mapping came from the
+        # fallback — a later warm run would be served the wrong mapper's
+        # output and break bit-identity.
+        if out.verified is not False and out.degraded is None:
+            try:
+                store.put(out, key=key)
+            except OSError as e:  # StoreIOError included — stay uncached
+                print(f"warning: artifact store write failed ({e}); "
+                      f"result not cached", flush=True)
         out.store_hit = False
     return out
 

@@ -51,7 +51,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.compiler import faultinject
 from repro.compiler.artifact import REPRO_VERSION, CompileResult
+from repro.compiler.errors import VERIFY_FAILURES, ArtifactError, StoreIOError
 from repro.compiler.fsio import (
     atomic_write_json,
     locked,
@@ -64,8 +66,10 @@ INDEX_SCHEMA = "repro.compiler/store-index@1"
 VERIFY_POLICIES = ("never", "first", "always")
 
 
-class StoreIntegrityError(ValueError):
-    """A store entry failed its digest or verification check."""
+class StoreIntegrityError(ArtifactError):
+    """A store entry failed its digest or verification check.  Part of the
+    error taxonomy via :class:`~repro.compiler.errors.ArtifactError`
+    (itself a ``ValueError``, preserving every pre-taxonomy handler)."""
 
 
 @dataclass(frozen=True)
@@ -443,10 +447,28 @@ class ArtifactStore:
             "artifact": art_json,
         }
         path = self.entry_path(digest)
-        atomic_write_json(path, entry)
+        try:
+            faultinject.check("store.put", key.describe())
+            atomic_write_json(path, entry)
+        except OSError as e:
+            # I/O-level write failure (disk full, EIO, permissions) — typed
+            # so callers can distinguish it from content-level corruption
+            raise StoreIOError(
+                f"store write failed for {key.describe()}: {e}") from e
+        # chaos hook: a "corrupt" fault tears the just-committed entry on
+        # disk; the integrity digest must catch it on the next get()
+        faultinject.maybe_corrupt(path, "store.put", key.describe())
 
         def mutate(entries):
-            row = self._index_row(entry, path, prev=entries.get(digest))
+            try:
+                row = self._index_row(entry, path, prev=entries.get(digest))
+            except FileNotFoundError:
+                # the just-committed file vanished before its index row was
+                # stamped: a concurrent reconcile/rebuild quarantined a torn
+                # write, or a gc raced us.  Don't index a ghost entry — the
+                # put degrades to a no-op and the next get() is a miss.
+                entries.pop(digest, None)
+                return
             if result.verified is True:
                 # the producer already proved this mapping against the
                 # oracle; 'first' consumers need not re-run the simulator
@@ -467,6 +489,7 @@ class ArtifactStore:
         digest = key.digest
         path = self.entry_path(digest)
         try:
+            faultinject.check("store.get", key.describe())
             entry = self._load_entry_file(path, digest)
         except FileNotFoundError:
             self.counters.misses += 1
@@ -477,6 +500,11 @@ class ArtifactStore:
             quarantine(path)
             self._update_index(lambda entries: entries.pop(digest, None))
             return None
+        except OSError as e:
+            # transient I/O failure (EIO, EACCES): typed, never quarantines
+            # — the entry may be perfectly intact
+            raise StoreIOError(
+                f"store read failed for {key.describe()}: {e}") from e
 
         result = CompileResult.from_json(entry["artifact"])
         verified_now = False
@@ -487,7 +515,7 @@ class ArtifactStore:
             try:
                 result.simulate(iterations=3)
                 verified_now = True
-            except Exception:
+            except VERIFY_FAILURES:
                 self.counters.verify_failures += 1
                 self.counters.misses += 1
                 quarantine(path, reason="unverified")

@@ -7,24 +7,38 @@ Per workload: II + cycles on Plaid 2×2 / ST 4×4 / spatial 4×4 (Figs. 12,
 PathFinder / node-level / hierarchical), ML-specialized variants (Fig. 19),
 motif coverage (Table 2), and the per-mapping simulator verification.
 
-The (workload × mapper/arch) grid is embarrassingly parallel: each cell is
-dispatched to a ``multiprocessing`` pool (``--jobs``, default = CPU count)
-and results are merged as they land.  Every mapper runs at a fixed seed, so
-the parallel run is bit-identical to the serial one.  Resume-from-JSON is
-preserved: workloads already present in ``--out`` are skipped, and the cache
-is rewritten after each workload completes.  Wall-clock per run is appended
-to ``BENCH_mapper.json`` (the mapper-speed trajectory surfaced by
-``benchmarks/run.py``'s ``bench_mapper_speed`` row).
+The (workload × mapper/arch) grid is embarrassingly parallel.  Each cell is
+dispatched through the **supervised runner**
+(:class:`repro.core.runner.SupervisedRunner`, ``--jobs`` worker slots,
+default = CPU count): every cell attempt runs in its own process, a cell
+past ``--cell-timeout`` is terminated and recorded, a worker that dies
+(OOM, segfault, ``kill -9``) is detected and retried, and a cell that
+exhausts its attempts lands in the workload record as a **structured
+failure** (``rec["failures"][job]``) instead of aborting the sweep.  Every
+mapper runs at a fixed seed, so the parallel run is bit-identical to the
+serial one.
+
+Resume-from-JSON is preserved and failure-aware: complete workloads in
+``--out`` are skipped, workloads with recorded failures re-attempt **only
+the failed cells** (the successful parts ride along in the record), and
+the cache is rewritten atomically after each workload completes.
+Wall-clock per run is appended to ``BENCH_mapper.json`` (the mapper-speed
+trajectory surfaced by ``benchmarks/run.py``'s ``bench_mapper_speed``
+row) under a bounded lock: a dead lock-holder strands the entry into a
+``*.stranded-*`` sidecar instead of hanging a finished run.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import os
+import sys
 import time
-from multiprocessing import Pool
 from typing import Dict, List, Optional, Tuple
 
+from repro.compiler import faultinject
+from repro.compiler.errors import LockTimeout
 from repro.compiler.fsio import (
     atomic_write_json,
     load_json_or_quarantine,
@@ -33,6 +47,7 @@ from repro.compiler.fsio import (
 from repro.compiler.pipeline import compile_workload, job_grid
 from repro.compiler.registry import MAPPERS
 from repro.core.motifs import generate_motifs, motif_cover_stats, validate_cover
+from repro.core.runner import SupervisedRunner
 from repro.core.workloads import (
     TABLE2,
     build_workload,
@@ -42,16 +57,40 @@ from repro.core.workloads import (
 )
 
 BENCH_PATH = "BENCH_mapper.json"
+#: bounded wait for the bench-trajectory lock (a finished collect must not
+#: hang forever behind a dead lock-holder; see _append_bench)
+BENCH_LOCK_TIMEOUT_S = 10.0
+#: comma-separated module names every worker imports before compiling —
+#: the spawn-safe registration channel (see _ensure_registrations)
+PLUGINS_VAR = "REPRO_PLUGINS"
 
 # The evaluation grid is derived from the mapper registry (``jobs`` metadata
 # on each ``@register_mapper``), not hard-coded: registering a new mapper or
 # arch variant extends the collect sweep automatically — ``collect()`` and
 # ``run_job`` re-derive the grid at call time, so registrations made after
-# this module is imported are still swept.  Caveat: pool workers see runtime
-# registrations via the fork start method (Linux default); under spawn,
-# register in an imported module so workers re-create the registration.
-# "spatial" keeps its dedicated results slot; "motifs" is an analysis pass,
-# not a mapper job.
+# this module is imported are still swept.  Workers re-derive registrations
+# under EVERY start method: built-ins register when the worker imports the
+# pipeline, and runtime registrations travel through ``REPRO_PLUGINS`` —
+# a comma-separated module list each worker imports first (under ``fork``
+# inherited registrations make this redundant; under ``spawn`` it is the
+# only channel).  "spatial" keeps its dedicated results slot; "motifs" is
+# an analysis pass, not a mapper job.
+
+
+def _ensure_registrations():
+    """Populate the mapper/arch registries inside a worker process.
+
+    Importing the pipeline registers every built-in; modules named in
+    ``REPRO_PLUGINS`` are imported afterwards so runtime registrations
+    (plug-in mappers/arches) exist under the ``spawn`` start method too,
+    where workers do not inherit the parent's interpreter state.
+    """
+    import repro.compiler.pipeline  # noqa: F401  (registers built-ins)
+
+    for mod in os.environ.get(PLUGINS_VAR, "").split(","):
+        mod = mod.strip()
+        if mod:
+            importlib.import_module(mod)
 
 
 def _spatial_jobs() -> Dict[str, Tuple[str, str]]:
@@ -95,9 +134,18 @@ JOB_NAMES = job_names()
 VERIFY_JOBS = ("plaid", "st")  # functional verification of headline mappings
 
 
+def _cell_key(wname: str, unroll: int) -> str:
+    return f"{wname}_u{unroll}"
+
+
 def run_job(task: Tuple[str, int, str, Optional[str]]):
     """One grid cell: compile one workload with one registered mapper/arch
     pair (or run the motif analysis).  Returns a small picklable payload.
+
+    Runs inside a supervised worker process: registrations are re-derived
+    first (start-method independent, see :func:`_ensure_registrations`)
+    and the fault-injection ``worker`` site fires here, so chaos tests
+    can crash/hang exactly one labelled cell.
 
     A non-``None`` store path makes every compile cache-first: a warm
     store serves the mapping without place & route, and the payload's
@@ -106,6 +154,8 @@ def run_job(task: Tuple[str, int, str, Optional[str]]):
     """
     wname, unroll, job = task[0], task[1], task[2]
     store_path = task[3] if len(task) > 3 else None
+    _ensure_registrations()
+    faultinject.check("worker", f"{_cell_key(wname, unroll)}/{job}")
     store = None
     if store_path is not None:
         from repro.compiler.store import ArtifactStore
@@ -142,25 +192,46 @@ def run_job(task: Tuple[str, int, str, Optional[str]]):
     if store is not None and job != "motifs":
         out["store_hit"] = bool(res.store_hit)
     out["wall_s"] = time.time() - t0
-    return f"{w.name}_u{w.unroll}", job, out
+    return _cell_key(w.name, w.unroll), job, out
 
 
-def _finalize(w, parts: Dict[str, Dict], grid_jobs) -> Dict:
+def _task_label(task) -> str:
+    return f"{_cell_key(task[0], task[1])}/{task[2]}"
+
+
+def _finalize(w, parts: Dict[str, Dict], grid_jobs,
+              failures: Optional[Dict[str, Dict]] = None) -> Dict:
+    """Assemble one workload record from its per-job parts.
+
+    Tolerates failed/missing parts: every schema slot a missing job would
+    have filled holds ``None`` (``ii``/``cycles`` keep a key per grid job
+    so golden diffs see an explicit regression, not a hole), and the
+    per-cell failure records ride along under ``"failures"``.
+    """
+    failures = failures or {}
+    motifs = parts.get("motifs")
+    sp = parts.get("spatial")
     rec = {
         "domain": w.domain,
         "iterations": w.iterations,
         "total": w.total,
         "compute": w.compute,
         "covered_paper": w.covered_paper,
-        "motifs": parts["motifs"]["motifs"],
-        "motifs_strict_covered": parts["motifs"]["motifs_strict_covered"],
-        "ii": {j: parts[j]["ii"] for j in grid_jobs},
-        "cycles": {j: parts[j]["cycles"] for j in grid_jobs},
-        "spatial": parts["spatial"]["spatial"],
-        "verified": {j: parts[j]["verified"] for j in VERIFY_JOBS},
-        "wall_s": round(sum(p["wall_s"] for p in parts.values()), 1),
+        "motifs": motifs["motifs"] if motifs else None,
+        "motifs_strict_covered":
+            motifs["motifs_strict_covered"] if motifs else None,
+        "ii": {j: (parts[j]["ii"] if j in parts else None)
+               for j in grid_jobs},
+        "cycles": {j: (parts[j]["cycles"] if j in parts else None)
+                   for j in grid_jobs},
+        "spatial": sp["spatial"] if sp else None,
+        "verified": {j: parts[j]["verified"]
+                     for j in VERIFY_JOBS if j in parts},
+        "wall_s": round(
+            sum(p["wall_s"] for p in parts.values())
+            + sum(f.get("wall_s", 0.0) for f in failures.values()), 1),
     }
-    rec["cycles"]["spatial"] = parts["spatial"]["cycles"]
+    rec["cycles"]["spatial"] = sp["cycles"] if sp else None
     hits = sum(
         p["route_cache"]["hits_exact"] + p["route_cache"]["hits_scoped"]
         for p in parts.values() if "route_cache" in p
@@ -179,10 +250,13 @@ def _finalize(w, parts: Dict[str, Dict], grid_jobs) -> Dict:
     st_miss = sum(1 for p in parts.values() if p.get("store_hit") is False)
     if st_hits or st_miss:
         rec["store"] = {"hits": st_hits, "misses": st_miss}
+    if failures:
+        rec["failures"] = failures
     return rec
 
 
-def _append_bench(bench_path: str, entry: Dict):
+def _append_bench(bench_path: str, entry: Dict,
+                  lock_timeout_s: float = BENCH_LOCK_TIMEOUT_S):
     """Append one run entry to the bench trajectory.
 
     Concurrent appenders (a ``collect`` run racing ``scripts/ci.sh``'s
@@ -191,19 +265,37 @@ def _append_bench(bench_path: str, entry: Dict):
     (temp file + ``os.replace``), and a truncated/corrupt trajectory file
     is quarantined and restarted instead of raising ``JSONDecodeError``
     after a full collect run.
+
+    The lock wait is **bounded**: a lock-holder that died (or hung) mid-
+    append must not strand a finished run forever.  On timeout the entry
+    is written to a ``<bench>.stranded-<pid>-<ts>.json`` sidecar with a
+    warning — recoverable data beats an indefinite hang.
     """
-    with locked(bench_path):
-        data = load_json_or_quarantine(bench_path, {"runs": []})
-        if not isinstance(data, dict):
-            data = {"runs": []}
-        data.setdefault("runs", []).append(entry)
-        atomic_write_json(bench_path, data, indent=1)
+    try:
+        with locked(bench_path, timeout_s=lock_timeout_s):
+            data = load_json_or_quarantine(bench_path, {"runs": []})
+            if not isinstance(data, dict):
+                data = {"runs": []}
+            data.setdefault("runs", []).append(entry)
+            atomic_write_json(bench_path, data, indent=1)
+    except LockTimeout:
+        sidecar = f"{bench_path}.stranded-{os.getpid()}-{int(time.time())}.json"
+        atomic_write_json(sidecar, {"runs": [entry]}, indent=1)
+        print(
+            f"warning: bench lock on {bench_path} not acquired within "
+            f"{lock_timeout_s}s (dead lock-holder?); entry preserved in "
+            f"{sidecar}", flush=True,
+        )
 
 
 def collect(out_path: str, quick: bool = False, jobs: int = 0,
             bench_path: str = BENCH_PATH, bench_note: str = "",
             store_path: Optional[str] = None,
-            workloads: Optional[List[str]] = None):
+            workloads: Optional[List[str]] = None,
+            cell_timeout_s: Optional[float] = None,
+            retries: int = 1,
+            start_method: Optional[str] = None,
+            plugins: Optional[List[str]] = None):
     """Run the (workload × job) grid; see module docstring.
 
     ``store_path`` routes every compile through the artifact store at that
@@ -212,7 +304,21 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
     entry).  ``workloads`` restricts the sweep to the named
     ``<name>_u<unroll>`` keys — e.g. ``["atax_u2"]`` for the CI
     store-roundtrip check.
+
+    Supervision knobs: ``cell_timeout_s`` is the hard wall-clock limit per
+    cell (``None`` = unlimited), ``retries`` bounds re-attempts of crashed
+    workers / transient errors, ``start_method`` picks the multiprocessing
+    start method (``None`` = platform default), and ``plugins`` names
+    modules every worker imports first so runtime mapper/arch
+    registrations survive ``spawn``.  A cell that exhausts its attempts
+    becomes a structured failure record in its workload's results entry
+    (``rec["failures"][job]``); the sweep itself always completes, and a
+    later run against the same ``--out`` re-attempts exactly the failed
+    cells.
     """
+    if plugins:
+        os.environ[PLUGINS_VAR] = ",".join(plugins)
+        _ensure_registrations()  # the parent derives the grid from them too
     # resume: a torn cache from an interrupted (pre-atomic-write) run is
     # quarantined and the sweep restarts, instead of dying on JSONDecodeError
     results = load_json_or_quarantine(out_path, {})
@@ -223,42 +329,98 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
         table = workloads_by_keys(table, workloads)
     grid_jobs = mapper_jobs()  # call-time: sweeps late registrations too
     names = job_names()
-    pending = [w for w in table if f"{w.name}_u{w.unroll}" not in results]
-    tasks = [(w.name, w.unroll, j, store_path) for w in pending for j in names]
-    by_key = {f"{w.name}_u{w.unroll}": w for w in pending}
+
+    # failure-aware resume: complete records are skipped; records carrying
+    # failures re-attempt only the jobs whose parts are missing, seeding
+    # the merge with the successful parts stored alongside the failures
+    pending: List = []
+    pending_jobs: Dict[str, List[str]] = {}
+    seed_parts: Dict[str, Dict[str, Dict]] = {}
+    for w in table:
+        key = _cell_key(w.name, w.unroll)
+        rec = results.get(key)
+        if isinstance(rec, dict) and not rec.get("failures"):
+            continue  # complete
+        parts = {}
+        if isinstance(rec, dict):
+            parts = {j: p for j, p in (rec.get("partial_parts") or {}).items()
+                     if j in names}
+        todo = [j for j in names if j not in parts]
+        if not todo:
+            continue
+        pending.append(w)
+        pending_jobs[key] = todo
+        if parts:
+            seed_parts[key] = parts
+    tasks = [
+        (w.name, w.unroll, j, store_path)
+        for w in pending for j in pending_jobs[_cell_key(w.name, w.unroll)]
+    ]
+    by_key = {_cell_key(w.name, w.unroll): w for w in pending}
     n_jobs = max(1, jobs or os.cpu_count() or 1)
     t_start = time.time()
+    n_failures = 0
 
     def consume(stream):
-        partial: Dict[str, Dict[str, Dict]] = {}
-        for key, job, out in stream:
+        nonlocal n_failures
+        partial: Dict[str, Dict[str, Dict]] = dict(seed_parts)
+        failed: Dict[str, Dict[str, Dict]] = {}
+        for task, status, payload in stream:
+            if status == "ok":
+                key, job, out = payload
+                partial.setdefault(key, {})[job] = out
+            else:  # structured cell failure — the sweep continues
+                key = _cell_key(task[0], task[1])
+                job = task[2]
+                failed.setdefault(key, {})[job] = payload.to_json()
+                n_failures += 1
+                print(f"{key:14s} {job}: FAILED "
+                      f"({payload.error}: {payload.message}; "
+                      f"{payload.attempts} attempt(s))", flush=True)
             parts = partial.setdefault(key, {})
-            parts[job] = out
-            if len(parts) < len(names):
+            fails = failed.get(key, {})
+            if len(parts) + len(fails) < len(names):
                 continue
-            rec = _finalize(by_key[key], partial.pop(key), grid_jobs)
+            rec = _finalize(by_key[key], parts, grid_jobs, failures=fails)
+            if fails:
+                # raw successful parts ride along so a resume re-attempts
+                # ONLY the failed cells and merges without recompiling
+                rec["partial_parts"] = partial.pop(key)
+                failed.pop(key, None)
+            else:
+                partial.pop(key)
             results[key] = rec
             store_note = ""
             if "store" in rec:
                 store_note = (f" store={rec['store']['hits']}h/"
                               f"{rec['store']['misses']}m")
-            print(
-                f"{key:14s} plaid={rec['ii']['plaid']} st={rec['ii']['st']} "
-                f"spatial_segs={rec['spatial']['segments']} "
-                f"verified={rec['verified']} ({rec['wall_s']}s cpu)"
-                f"{store_note}",
-                flush=True,
-            )
+            if rec.get("failures"):
+                print(f"{key:14s} PARTIAL: {len(rec['failures'])} failed "
+                      f"cell(s) {sorted(rec['failures'])} recorded "
+                      f"({rec['wall_s']}s cpu){store_note}", flush=True)
+            else:
+                segs = rec["spatial"]["segments"] if rec["spatial"] else None
+                print(
+                    f"{key:14s} plaid={rec['ii']['plaid']} "
+                    f"st={rec['ii']['st']} spatial_segs={segs} "
+                    f"verified={rec['verified']} ({rec['wall_s']}s cpu)"
+                    f"{store_note}",
+                    flush=True,
+                )
             # atomic rewrite: a crash mid-dump must not corrupt the
             # resume cache the next run would load
             atomic_write_json(out_path, results, indent=1)
 
     if tasks:
-        if n_jobs > 1:
-            with Pool(min(n_jobs, len(tasks))) as pool:
-                consume(pool.imap_unordered(run_job, tasks))
-        else:
-            consume(map(run_job, tasks))
+        runner = SupervisedRunner(
+            run_job,
+            jobs=min(n_jobs, len(tasks)),
+            timeout_s=cell_timeout_s,
+            retries=retries,
+            start_method=start_method,
+            label=_task_label,
+        )
+        consume(runner.run(tasks))
         cells = [results[k] for k in by_key if k in results]
         hits = sum(c.get("route_cache", {}).get("hits", 0) for c in cells)
         misses = sum(c.get("route_cache", {}).get("misses", 0) for c in cells)
@@ -270,6 +432,8 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
             "wall_s": round(time.time() - t_start, 1),
             "cpu_s": round(sum(c["wall_s"] for c in cells), 1),
         }
+        if n_failures:
+            entry["failed_cells"] = n_failures
         if hits or misses:
             entry["route_cache_hit_rate"] = round(hits / (hits + misses), 4)
         if store_path is not None:
@@ -287,6 +451,12 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
         if bench_note:
             entry["note"] = bench_note
         _append_bench(bench_path, entry)
+        if n_failures:
+            print(
+                f"collect: {n_failures} cell(s) recorded as structured "
+                f"failures; re-run against {out_path} to re-attempt exactly "
+                f"those cells", flush=True,
+            )
     return results
 
 
@@ -306,7 +476,30 @@ if __name__ == "__main__":
     ap.add_argument("--workloads", default=None,
                     help="comma-separated <name>_u<unroll> keys to restrict "
                          "the sweep (e.g. atax_u2)")
+    ap.add_argument("--cell-timeout", type=float, default=None, metavar="S",
+                    help="hard wall-clock limit per grid cell; a cell past "
+                         "it is killed and recorded as a failure")
+    ap.add_argument("--retries", type=int, default=1,
+                    help="extra attempts for crashed workers / transient "
+                         "errors (default 1)")
+    ap.add_argument("--start-method", default=None,
+                    choices=("fork", "spawn", "forkserver"),
+                    help="multiprocessing start method (default: platform)")
+    ap.add_argument("--plugins", default=None,
+                    help="comma-separated modules each worker imports first "
+                         "(registers plug-in mappers/arches under spawn)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any cell ended as a structured "
+                         "failure (default: record failures, exit 0)")
     args = ap.parse_args()
-    collect(args.out, args.quick, jobs=args.jobs, bench_path=args.bench_out,
-            bench_note=args.bench_note, store_path=args.store,
-            workloads=(args.workloads.split(",") if args.workloads else None))
+    res = collect(
+        args.out, args.quick, jobs=args.jobs, bench_path=args.bench_out,
+        bench_note=args.bench_note, store_path=args.store,
+        workloads=(args.workloads.split(",") if args.workloads else None),
+        cell_timeout_s=args.cell_timeout, retries=args.retries,
+        start_method=args.start_method,
+        plugins=(args.plugins.split(",") if args.plugins else None),
+    )
+    if args.strict and any(
+            isinstance(r, dict) and r.get("failures") for r in res.values()):
+        sys.exit(1)

@@ -92,6 +92,19 @@ class PipelineMapper:
         self.ctx.placer = UnitPlacer(self.ctx)
         self._passes: Tuple[MapperPass, ...] = tuple(self.build_passes())
 
+    def set_deadline(self, deadline: Optional[float]):
+        """Arm a cooperative wall-clock deadline (a ``time.monotonic()``
+        timestamp).  Passes check it between stages / restarts /
+        negotiation rounds / SA step blocks and raise
+        :class:`~repro.compiler.errors.CompileTimeout` — carrying the
+        partial per-pass stats — once it passes.  The checks are pure
+        clock reads, so a run that finishes in time is bit-identical to
+        an undeadlined one.  This is the hook ``compile(...,
+        deadline_s=)`` uses; mappers outside this framework simply lack
+        the method and rely on the grid runner's hard per-cell timeout.
+        """
+        self.ctx.set_deadline(deadline)
+
     # -- composition ---------------------------------------------------------
     def build_passes(self) -> Tuple[MapperPass, ...]:
         raise NotImplementedError
@@ -130,6 +143,7 @@ class PipelineMapper:
 
     def map(self, dfg: DFG) -> Optional[Mapping]:
         for ii in range(self.mii(dfg), self.max_ii + 1):
+            self.ctx.check_deadline(f"II sweep (II={ii})")
             m = self.map_at_ii(dfg, ii)
             if m is not None:
                 return m

@@ -17,9 +17,10 @@ accumulates wall seconds + counters into the uniform per-pass schema on
 from __future__ import annotations
 
 import random
-from time import perf_counter
+from time import monotonic, perf_counter
 from typing import Dict, List, Optional, Tuple
 
+from repro.compiler.errors import CompileTimeout
 from repro.core.dfg import DFG
 from repro.core.routing import RouteCache
 from repro.mapping.mapping import DfgTables, Mapping, MapperStats
@@ -81,6 +82,10 @@ class PassContext:
         self.arch = config.arch
         self.stats = MapperStats()
         self.route_cache: Optional[RouteCache] = None
+        # cooperative wall-clock deadline (time.monotonic() value), set by
+        # PipelineMapper.set_deadline for compile(..., deadline_s=...)
+        self.deadline: Optional[float] = None
+        self._deadline_t0: Optional[float] = None
         # -- per-DFG acceleration state (reset by _on_new_dfg) -------------
         self._dfg_tables: Optional[Tuple[DFG, DfgTables]] = None
         self._units_cache: Optional[Tuple[DFG, list]] = None
@@ -135,10 +140,51 @@ class PassContext:
     def new_mrrg(self, ii: int) -> MRRG:
         return MRRG(self.arch, ii, stats=self.stats.route)
 
+    # -- deadline -------------------------------------------------------------
+    def set_deadline(self, deadline: Optional[float]):
+        """Arm (or clear) the cooperative wall-clock deadline — a
+        ``time.monotonic()`` timestamp, not a duration."""
+        self.deadline = deadline
+        self._deadline_t0 = monotonic() if deadline is not None else None
+
+    def check_deadline(self, where: str = ""):
+        """Raise :class:`~repro.compiler.errors.CompileTimeout` if the
+        armed deadline has passed.
+
+        Deliberately a **pure clock read**: no RNG draw, no state mutation
+        — a compile that finishes inside its deadline is bit-identical
+        (same II, same mapping) to one run with no deadline at all, which
+        is what keeps the golden-II records valid under ``deadline_s``.
+        The exception carries the partial per-pass stats accumulated so
+        far, so a timeout is still attributable to the pass that consumed
+        the budget.
+        """
+        dl = self.deadline
+        if dl is None:
+            return
+        now = monotonic()
+        if now < dl:
+            return
+        t0 = self._deadline_t0
+        elapsed = (now - t0) if t0 is not None else None
+        budget = (dl - t0) if t0 is not None else None
+        raise CompileTimeout(
+            f"place & route exceeded its wall-clock deadline"
+            + (f" of {budget:.3g}s" if budget is not None else "")
+            + (f" at {where}" if where else ""),
+            deadline_s=budget,
+            elapsed_s=elapsed,
+            where=where,
+            pass_stats=self.stats.snapshot(self.route_cache)["passes"],
+        )
+
     # -- pass execution -----------------------------------------------------
     def run(self, pss: MapperPass, state: MapState) -> str:
         """Run one pass, accumulating its wall time in the per-pass stats
-        (composite passes tick their own phase rows instead)."""
+        (composite passes tick their own phase rows instead).  The armed
+        deadline is checked before every pass: pipelines time out between
+        stages even if no inner loop cooperates."""
+        self.check_deadline(f"before pass {pss.name}")
         if pss.self_timed:
             return pss.run(self, state)
         t0 = perf_counter()

@@ -76,12 +76,14 @@ class NegotiatedMultiStartPass(MapperPass):
         dfg, ii = state.dfg, state.ii
         units = state.units
         for restart in range(getattr(cfg, "construction_restarts", 4)):
+            ctx.check_deadline(f"construction restart {restart}")
             rng = cfg.restart_rng(ii, restart)
             t_place = perf_counter()
             mrrg = ctx.new_mrrg(ii)
             mapping = Mapping(ctx.arch, dfg, ii)
             ok = True
             for u in units:
+                ctx.check_deadline(f"unit construction (restart {restart})")
                 if not placer.place_unit_overuse(mrrg, dfg, mapping, u, rng):
                     ok = False
                     break
@@ -91,6 +93,7 @@ class NegotiatedMultiStartPass(MapperPass):
             t_rounds = perf_counter()
             success = False
             for it in range(cfg.neg_rounds):
+                ctx.check_deadline(f"negotiation round {it}")
                 if not mrrg.has_overuse() and placer.all_routed(dfg, mapping):
                     need = sum(1 for n in dfg.nodes.values()
                                if n.op not in ("const", "input"))
@@ -142,6 +145,7 @@ class LegacyNegotiationPass(MapperPass):
         dfg, mrrg, mapping, rng = (state.dfg, state.mrrg, state.mapping,
                                    state.rng)
         for it in range(30):
+            ctx.check_deadline(f"legacy negotiation round {it}")
             # rip up everything, re-route with current history
             for idx in list(mapping.routes):
                 mrrg.release(dfg.edges[idx].src, mapping.pop_route(idx))

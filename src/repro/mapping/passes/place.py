@@ -850,6 +850,8 @@ class SAImprovementPass(MapperPass):
         temp = 2.0
         last_gain = 0
         for step in range(ctx.config.time_budget):
+            if step % 128 == 0:  # cooperative deadline check (pure read)
+                ctx.check_deadline(f"anneal step {step}")
             if not unplaced and not mrrg.has_overuse() \
                     and placer.all_routed(dfg, mapping):
                 break
@@ -889,6 +891,7 @@ class MultiStartUnitPlacementPass(MapperPass):
         dfg, ii = state.dfg, state.ii
         base_units = state.units
         for restart in range(cfg.restarts):
+            ctx.check_deadline(f"placement restart {restart}")
             rng = cfg.restart_rng(ii, restart)
             units = list(base_units)
             if restart:
@@ -900,6 +903,7 @@ class MultiStartUnitPlacementPass(MapperPass):
             mapping = Mapping(ctx.arch, dfg, ii)
             failed = None
             for u in units:
+                ctx.check_deadline(f"unit placement (restart {restart})")
                 if not placer.place_unit_feasible(mrrg, dfg, mapping, u, rng):
                     failed = u
                     break
