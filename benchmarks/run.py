@@ -254,6 +254,34 @@ def bench_mapper_speed():
 
 
 # ---------------------------------------------------------------------------
+# Simulator throughput — batched vs scalar verification (BENCH_mapper.json)
+# ---------------------------------------------------------------------------
+
+
+def bench_sim_throughput():
+    if not os.path.exists(BENCH_MAPPER):
+        emit("bench_sim_throughput", 0,
+             "SKIP(run python -m repro.compiler verify --bench-out)")
+        return
+    with open(BENCH_MAPPER) as f:
+        data = json.load(f)
+    runs = [r for r in data.get("runs", []) if "sim_throughput" in r]
+    if not runs:
+        emit("bench_sim_throughput", 0, "SKIP(no sim_throughput recorded)")
+        return
+    s = runs[-1]["sim_throughput"]
+    warm = s.get("warm_mappings_per_s") or 0.0
+    scalar = s.get("scalar_mappings_per_s")
+    speedup = f" {s['speedup_warm']}x vs scalar {scalar}/s" if scalar else ""
+    emit(
+        "bench_sim_throughput", 1e6 / warm if warm else 0,
+        f"batch={s['mappings']} backend={s['backend']} "
+        f"cold={s['cold_mappings_per_s']}/s warm={warm}/s"
+        f"{speedup} (target >=10x)",
+    )
+
+
+# ---------------------------------------------------------------------------
 # Fig. 19 — domain specialization
 # ---------------------------------------------------------------------------
 
@@ -388,6 +416,7 @@ def main() -> None:
     bench_scalability()
     bench_mappers()
     bench_mapper_speed()
+    bench_sim_throughput()
     bench_domain()
     bench_kernels()
     bench_roofline()

@@ -71,6 +71,28 @@ assert last["misses"] == 0 and last["hit_rate"] == 1.0, f"warm pass not 100% hit
 print(f"store roundtrip OK: {last['hits']} hits / 0 misses, II+cycles identical")
 EOF
 
+echo "== batched simulator gate: verdict parity vs the scalar oracle =="
+# every artifact the store-roundtrip pass produced re-verifies through one
+# simulate_batch call, and --parity diffs each verdict against the frozen
+# scalar oracle (exit 10 on any divergence); the post-sweep --batch-verify
+# stage must agree that every stored mapping still verifies
+timeout "$BUDGET" python -m repro.compiler verify --dir "$STORE_DIR" --parity \
+    --bench-out "$SBENCH" --bench-note "ci sim gate"
+S3=$(mktemp /tmp/ci_store_r3.XXXXXX.json); rm -f "$S3"
+timeout "$BUDGET" python -m repro.core.collect --quick --workloads atax_u2 \
+    --out "$S3" --store "$STORE_DIR" --bench-out "$SBENCH" --batch-verify
+python - "$SBENCH" <<'EOF'
+import json, sys
+runs = json.load(open(sys.argv[1]))["runs"]
+sim = [r for r in runs if "sim_throughput" in r][-1]["sim_throughput"]
+assert sim["mappings"] > 0, sim
+ver = [r for r in runs if "sim_verify" in r][-1]["sim_verify"]
+assert ver["failed"] == 0, f"post-sweep batch verify found failures: {ver}"
+print(f"sim gate OK: parity on {sim['mappings']} mappings, "
+      f"warm {sim['warm_mappings_per_s']} mappings/s; "
+      f"post-sweep batch verify {ver['mappings']} mappings, 0 failures")
+EOF
+
 echo "== chaos gate: injected crash+hang must record failures, then heal =="
 CHAOS_OUT=$(mktemp /tmp/ci_chaos.XXXXXX.json); rm -f "$CHAOS_OUT"
 CHAOS_BENCH=$(mktemp /tmp/ci_chaos_bench.XXXXXX.json); rm -f "$CHAOS_BENCH"

@@ -261,7 +261,18 @@ class CompileResult:
         """Cycle-accurately execute the stored mapping(s) against the DFG
         reference oracle; returns the per-(node, iteration) value dict of
         each mapping.  Raises if no routed mapping was stored (mapper
-        failure, or the spatial analytic fallback)."""
+        failure, or the spatial analytic fallback).
+
+        Multi-mapping artifacts (spatial segments) verify through the
+        batched backend (``repro.sim.verify_mappings``) — one vectorized
+        call instead of a per-segment scalar loop; this is the single
+        choke point, so ``compile(..., verify=)``, the store's
+        verify-on-load policies, and ``inspect --verify`` all inherit it.
+        A *disproven* mapping raises ``AssertionError`` from either
+        engine; a batched-backend *fault* (injected OSError, jax runtime
+        failure) degrades to the scalar oracle rather than skipping
+        verification — an unverified artifact is never reported
+        verified."""
         from repro.compiler.errors import MappingInfeasible
         from repro.core.simulate import simulate as _simulate
 
@@ -272,8 +283,22 @@ class CompileResult:
                 f"artifact {self.key}/{self.mapper} holds no routed mapping "
                 "to simulate"
             )
+        rebuilt = self.rebuild_mappings()
+        if len(rebuilt) > 1:
+            from repro.sim.batch import verify_mappings
+
+            try:
+                return verify_mappings(rebuilt, iterations=iterations)
+            except AssertionError:
+                raise  # a genuine disproof — exactly what verify is for
+            except (OSError, RuntimeError) as e:
+                print(
+                    f"warning: batched verify backend failed "
+                    f"({type(e).__name__}: {e}); degrading to the scalar "
+                    f"simulator for {self.key}/{self.mapper}", flush=True,
+                )
         return [
-            _simulate(m, iterations=iterations) for m in self.rebuild_mappings()
+            _simulate(m, iterations=iterations) for m in rebuilt
         ]
 
     # -- display -----------------------------------------------------------

@@ -357,6 +357,157 @@ def _cmd_diff(args) -> int:
     return 0
 
 
+# -- batched verification ----------------------------------------------------
+
+
+def _gather_artifacts(args) -> List[tuple]:
+    """Collect ``(label, CompileResult)`` pairs from ``--dir`` (an artifact
+    store, scanned read-only) and/or positional paths (artifact files or
+    directories of them)."""
+    out: List[tuple] = []
+    if args.dir:
+        store = ArtifactStore(args.dir)
+        for key, art in store.iter_artifacts():
+            out.append((key.describe(), art))
+        if store.counters.rejected:
+            print(f"note: {store.counters.rejected} corrupt store entr"
+                  f"{'y' if store.counters.rejected == 1 else 'ies'} "
+                  "skipped", file=sys.stderr)
+    for path in args.paths:
+        files = ([os.path.join(path, fn) for fn in sorted(os.listdir(path))
+                  if fn.endswith(".json")]
+                 if os.path.isdir(path) else [path])
+        for fp in files:
+            if not _is_artifact(fp):
+                print(f"note {fp}: not a {ARTIFACT_SCHEMA} artifact "
+                      "(skipped)")
+                continue
+            art = CompileResult.load(fp)
+            out.append((f"{art.key}/{_job_of(art)}", art))
+    return out
+
+
+def _cmd_verify(args) -> int:
+    """Batch-verify every artifact via ``repro.sim.simulate_batch``: one
+    vectorized backend call over the whole collection instead of a scalar
+    loop per mapping.  Prints per-artifact verdicts and sustained
+    mappings/sec; ``--parity`` additionally runs the scalar oracle on
+    every mapping and raises ``CompileError`` (exit 10) on any verdict
+    divergence — the CI gate for the batched backends."""
+    from repro.sim.batch import prepare_batch, simulate_batch
+    from repro.sim.check import scalar_verdict
+
+    arts = _gather_artifacts(args)
+    if not arts:
+        print("no artifacts found to verify", file=sys.stderr)
+        return 1
+
+    mappings: List[object] = []
+    owners: List[tuple] = []          # (artifact row, segment index)
+    rows: List[Dict] = []             # per-artifact verdict accumulator
+    for label, art in arts:
+        row = {"label": label, "segments": 0, "fail": None, "skip": None}
+        rows.append(row)
+        if not art.mappings:
+            row["skip"] = "no stored mapping (unmapped / analytic spatial)"
+            continue
+        try:
+            ms = art.rebuild_mappings()
+        except VERIFY_FAILURES as e:
+            # mangled record: rebuilding IS part of verification
+            row["fail"] = f"unloadable mapping ({type(e).__name__}: {e})"
+            continue
+        row["segments"] = len(ms)
+        for s, m in enumerate(ms):
+            mappings.append(m)
+            owners.append((row, s))
+
+    # cold = lower + pack + run; warm = rerun on the cached PreparedBatch
+    # (the serving-tier shape: artifacts re-verified on every load)
+    t0 = time.perf_counter()
+    cold = simulate_batch(mappings, iterations=args.iterations,
+                          backend=args.backend)
+    t_cold = time.perf_counter() - t0
+    prepared = prepare_batch(mappings, iterations=args.iterations)
+    t0 = time.perf_counter()
+    simulate_batch(mappings, iterations=args.iterations,
+                   backend=args.backend, prepared=prepared)
+    t_warm = time.perf_counter() - t0
+    for (row, s), v in zip(owners, cold):
+        if not v.ok and row["fail"] is None:
+            row["fail"] = f"segment {s}: {v.reason}"
+
+    rc = 0
+    for row in rows:
+        if row["skip"]:
+            print(f"SKIP  {row['label']:34s} {row['skip']}")
+        elif row["fail"]:
+            print(f"FAIL  {row['label']:34s} {row['fail']}")
+            rc = 1
+        else:
+            print(f"OK    {row['label']:34s} "
+                  f"{row['segments']} mapping(s) verified")
+
+    n = len(mappings)
+    cold_mps = n / t_cold if t_cold > 0 else 0.0
+    warm_mps = n / t_warm if t_warm > 0 else 0.0
+    print(f"batched[{cold.backend}]: {n} mappings, "
+          f"{cold.n_buckets} bucket(s), "
+          f"{cold.n_scalar_fallback} scalar fallback(s); "
+          f"cold {cold_mps:.0f} mappings/s, warm {warm_mps:.0f} mappings/s")
+
+    scalar_mps = None
+    if args.parity:
+        t0 = time.perf_counter()
+        divergent = 0
+        for i, (m, v) in enumerate(zip(mappings, cold)):
+            ok, _values, reason = scalar_verdict(m,
+                                                 iterations=args.iterations)
+            if ok != v.ok:
+                row, s = owners[i]
+                print(f"PARITY MISMATCH  {row['label']} segment {s}: "
+                      f"scalar {'ok' if ok else f'FAIL ({reason})'} vs "
+                      f"batched {'ok' if v.ok else f'FAIL ({v.reason})'}",
+                      file=sys.stderr)
+                divergent += 1
+        t_scalar = time.perf_counter() - t0
+        scalar_mps = n / t_scalar if t_scalar > 0 else 0.0
+        speedup = warm_mps / scalar_mps if scalar_mps else 0.0
+        print(f"scalar oracle: {scalar_mps:.0f} mappings/s -> batched warm "
+              f"speedup {speedup:.1f}x; verdict parity on {n - divergent}"
+              f"/{n} mappings")
+        if divergent:
+            raise CompileError(
+                f"batched simulator diverged from the scalar oracle on "
+                f"{divergent}/{n} mappings")
+
+    if args.bench_out:
+        from repro.core.collect import _append_bench
+
+        entry = {
+            "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "sim_throughput": {
+                "backend": cold.backend,
+                "mappings": n,
+                "buckets": cold.n_buckets,
+                "scalar_fallbacks": cold.n_scalar_fallback,
+                "iterations": args.iterations,
+                "cold_mappings_per_s": round(cold_mps, 1),
+                "warm_mappings_per_s": round(warm_mps, 1),
+            },
+        }
+        if scalar_mps is not None:
+            entry["sim_throughput"]["scalar_mappings_per_s"] = round(
+                scalar_mps, 1)
+            entry["sim_throughput"]["speedup_warm"] = round(
+                warm_mps / scalar_mps, 1) if scalar_mps else None
+        if args.bench_note:
+            entry["note"] = args.bench_note
+        _append_bench(args.bench_out, entry)
+        print(f"sim_throughput entry appended to {args.bench_out}")
+    return rc
+
+
 # -- store subcommands -------------------------------------------------------
 
 
@@ -563,6 +714,28 @@ def build_parser() -> argparse.ArgumentParser:
                    help="re-simulate the stored mapping (no P&R re-run)")
     i.add_argument("--iterations", type=int, default=3)
 
+    v = sub.add_parser("verify",
+                       help="batch-verify artifacts via the vectorized "
+                            "simulator (repro.sim)")
+    v.add_argument("paths", nargs="*",
+                   help="artifact files or directories of artifacts")
+    v.add_argument("--dir", default=None, metavar="STORE",
+                   help="artifact store to verify (read-only scan; "
+                        "combinable with positional paths)")
+    v.add_argument("--iterations", type=int, default=3)
+    v.add_argument("--backend", default="auto",
+                   choices=("auto", "numpy", "jnp", "pallas"),
+                   help="batched backend (auto: REPRO_SIM_BACKEND or numpy)")
+    v.add_argument("--parity", action="store_true",
+                   help="also run the scalar oracle on every mapping; "
+                        "verdict divergence exits with code 10 "
+                        "(CompileError) — the CI gate")
+    v.add_argument("--bench-out", default=None, metavar="PATH",
+                   help="append a sim_throughput entry to this bench "
+                        "trajectory JSON (flock-bounded)")
+    v.add_argument("--bench-note", default="",
+                   help="tag recorded with the bench entry")
+
     d = sub.add_parser("diff", help="artifact vs artifact, or vs --golden")
     d.add_argument("paths", nargs="+",
                    help="artifacts, artifact dirs, or a collect results.json")
@@ -633,6 +806,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         "list": _cmd_list,
         "compile": _cmd_compile,
         "inspect": _cmd_inspect,
+        "verify": _cmd_verify,
         "diff": _cmd_diff,
         "store": _cmd_store,
     }[args.cmd]

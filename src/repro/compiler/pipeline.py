@@ -19,6 +19,12 @@ Determinism: with the same (workload, arch, mapper, seed, budget) inputs,
 ``compile`` constructs the mapper exactly as the legacy entry points did
 (``cls(make_arch(arch), seed=seed)``), so IIs are bit-identical to the
 golden records in ``tests/golden_ii_quick.json``.
+
+Verification (``verify=True``, and every store verify-on-load policy)
+funnels through ``CompileResult.simulate``: multi-segment artifacts run
+the batched simulator (``repro.sim``, backend selected via
+``REPRO_SIM_BACKEND``) and degrade to the frozen scalar oracle on backend
+faults — see ``docs/simulator.md``.
 """
 from __future__ import annotations
 

@@ -562,6 +562,25 @@ class ArtifactStore:
         quarantine(self.entry_path(digest), reason=reason)
         self._update_index(lambda entries: entries.pop(digest, None))
 
+    def iter_artifacts(self):
+        """Yield ``(CompileKey, CompileResult)`` for every intact entry,
+        in deterministic (digest-sorted) order — a *read-only* scan for
+        batch re-verification (``plaid-compile verify``, collect's
+        post-sweep stage): hit counters and LRU order are untouched.
+        Corrupt entries are counted in ``counters.rejected`` and skipped,
+        not quarantined (that stays a ``get``/``gc`` decision)."""
+        for digest in self._listed_digests():
+            path = self.entry_path(digest)
+            try:
+                entry = self._load_entry_file(path, digest)
+            except FileNotFoundError:
+                continue  # raced a gc/quarantine
+            except StoreIntegrityError:
+                self.counters.rejected += 1
+                continue
+            yield (CompileKey.from_json(entry["key"]),
+                   CompileResult.from_json(entry["artifact"]))
+
     def ls(self) -> List[Dict]:
         """Index rows sorted most-recently-used first (by the monotonic
         ``seq`` stamp; pre-seq rows order by wall-clock ``last_used``)."""

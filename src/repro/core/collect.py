@@ -288,6 +288,50 @@ def _append_bench(bench_path: str, entry: Dict,
         )
 
 
+def _batch_verify_store(store_path: str, iterations: int = 3) -> Dict:
+    """Post-sweep verification sweep: pull every mapped artifact out of
+    the store and re-verify the whole collection through one
+    ``repro.sim.simulate_batch`` call (the batched backend the serving
+    tier uses), returning summary stats for the bench entry.  A failed
+    verdict here means a corrupt or miscompiled artifact survived the
+    sweep — it is reported per artifact, not raised."""
+    from repro.compiler.store import ArtifactStore
+    from repro.sim.batch import simulate_batch
+
+    store = ArtifactStore(store_path)
+    mappings, labels = [], []
+    for key, art in store.iter_artifacts():
+        if not art.mappings:
+            continue
+        try:
+            ms = art.rebuild_mappings()
+        except Exception as e:
+            print(f"batch-verify: {key.describe()}: unloadable mapping "
+                  f"({type(e).__name__}: {e})", flush=True)
+            continue
+        for s, m in enumerate(ms):
+            mappings.append(m)
+            labels.append(f"{key.describe()}[{s}]")
+    if not mappings:
+        return {"mappings": 0, "failed": 0}
+    result = simulate_batch(mappings, iterations=iterations)
+    failed = 0
+    for label, v in zip(labels, result):
+        if not v.ok:
+            failed += 1
+            print(f"batch-verify FAIL {label}: {v.reason}", flush=True)
+    print(f"batch-verify[{result.backend}]: {len(mappings)} mapping(s), "
+          f"{failed} failure(s), "
+          f"{result.mappings_per_s:.0f} mappings/s", flush=True)
+    return {
+        "backend": result.backend,
+        "mappings": len(mappings),
+        "failed": failed,
+        "scalar_fallbacks": result.n_scalar_fallback,
+        "mappings_per_s": round(result.mappings_per_s, 1),
+    }
+
+
 def collect(out_path: str, quick: bool = False, jobs: int = 0,
             bench_path: str = BENCH_PATH, bench_note: str = "",
             store_path: Optional[str] = None,
@@ -295,7 +339,8 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
             cell_timeout_s: Optional[float] = None,
             retries: int = 1,
             start_method: Optional[str] = None,
-            plugins: Optional[List[str]] = None):
+            plugins: Optional[List[str]] = None,
+            batch_verify: bool = False):
     """Run the (workload × job) grid; see module docstring.
 
     ``store_path`` routes every compile through the artifact store at that
@@ -303,7 +348,10 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
     place & route; hit/miss counts land in each record and in the bench
     entry).  ``workloads`` restricts the sweep to the named
     ``<name>_u<unroll>`` keys — e.g. ``["atax_u2"]`` for the CI
-    store-roundtrip check.
+    store-roundtrip check.  ``batch_verify`` re-verifies every stored
+    mapping after the sweep through one ``repro.sim.simulate_batch``
+    call (requires ``store_path``); its stats land in the bench entry
+    under ``sim_verify``.
 
     Supervision knobs: ``cell_timeout_s`` is the hard wall-clock limit per
     cell (``None`` = unlimited), ``retries`` bounds re-attempts of crashed
@@ -448,6 +496,8 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
             }
             print(f"store: {st_hits} hit(s), {st_miss} miss(es) "
                   f"({store_path})", flush=True)
+        if batch_verify and store_path is not None:
+            entry["sim_verify"] = _batch_verify_store(store_path)
         if bench_note:
             entry["note"] = bench_note
         _append_bench(bench_path, entry)
@@ -488,6 +538,10 @@ if __name__ == "__main__":
     ap.add_argument("--plugins", default=None,
                     help="comma-separated modules each worker imports first "
                          "(registers plug-in mappers/arches under spawn)")
+    ap.add_argument("--batch-verify", action="store_true",
+                    help="after the sweep, re-verify every stored mapping "
+                         "through one batched simulate_batch call "
+                         "(requires --store)")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero if any cell ended as a structured "
                          "failure (default: record failures, exit 0)")
@@ -499,6 +553,7 @@ if __name__ == "__main__":
         cell_timeout_s=args.cell_timeout, retries=args.retries,
         start_method=args.start_method,
         plugins=(args.plugins.split(",") if args.plugins else None),
+        batch_verify=args.batch_verify,
     )
     if args.strict and any(
             isinstance(r, dict) and r.get("failures") for r in res.values()):

@@ -13,6 +13,7 @@ from typing import Dict, List, Tuple
 
 from repro.core.dfg import DFG, _apply
 from repro.mapping import Mapping
+from repro.sim.check import close
 
 
 def simulate(mapping: Mapping, iterations: int = 4) -> Dict[Tuple[int, int], float]:
@@ -106,7 +107,11 @@ def simulate(mapping: Mapping, iterations: int = 4) -> Dict[Tuple[int, int], flo
             got = val.get((n, it))
             want = ref[n][it]
             assert got is not None, (n, it)
-            assert abs(got - want) < 1e-6, (
+            # shared mixed abs/rel policy (repro.sim.check): the batched
+            # backends accept/reject under the exact same rule, so a
+            # large-magnitude workload cannot pass one simulator and
+            # spuriously fail the other
+            assert close(got, want), (
                 f"node {n}({dfg.nodes[n].op}) iter {it}: got {got}, want {want}"
             )
     return val

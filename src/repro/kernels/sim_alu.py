@@ -1,0 +1,75 @@
+"""Pallas kernel for the batched simulator's ALU apply stage.
+
+One simulated cycle of the whole PE grid applies, per (mapping, node)
+lane, the node's opcode to its three gathered operands — a pure
+elementwise dispatch over a static opcode tensor, which is exactly the
+shape the VPU wants.  The gathers/scatters around it stay in jnp (XLA
+fuses them); this kernel replaces the 20-way ``jnp.where`` ladder in
+``repro.sim.step.apply_ops_jnp`` for ``backend="pallas"``.
+
+The opcode dispatch is still a where-ladder *inside* the kernel, but over
+VMEM-resident blocks: every lane evaluates every op and keeps its own —
+branch-free, as TPU vector hardware requires (and exactly what the
+domain-hardwired PCU of the paper does in silicon: all functional units
+compute, the configuration selects).
+
+On CPU hosts (this container) the kernel executes with
+``interpret=True`` via the same ``auto_interpret()`` convention as
+``repro.kernels.ops``; ``repro.sim.step`` additionally wraps the call in
+a capability breaker that falls back to plain jnp if Pallas cannot run
+at all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.sim.lower import OPS
+from repro.sim.step import _jnp_alu
+
+#: float32 VPU tile (sublane x lane)
+_TILE_R, _TILE_C = 8, 128
+
+
+def _kernel(code_ref, a_ref, b_ref, c_ref, leaf_ref, o_ref):
+    code = code_ref[...]
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    leaf = leaf_ref[...]
+    out = jnp.zeros_like(a)
+    for i in range(len(OPS)):
+        out = jnp.where(code == i, _jnp_alu(jnp, i, a, b, c, leaf), out)
+    o_ref[...] = out
+
+
+def _pad_to(x, rows: int, cols: int):
+    r, c = x.shape
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def sim_alu(opcode, a, b, c, leaf, *, interpret: bool = None):
+    """Elementwise ``_apply(opcode, a, b, c, leaf)`` over (B, N) float32
+    arrays (any 2-D shape; padded to VPU tiles internally)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rows_, cols_ = opcode.shape
+    rows = -(-rows_ // _TILE_R) * _TILE_R
+    cols = -(-cols_ // _TILE_C) * _TILE_C
+    args = [
+        _pad_to(opcode.astype(jnp.int32), rows, cols),
+        _pad_to(a.astype(jnp.float32), rows, cols),
+        _pad_to(b.astype(jnp.float32), rows, cols),
+        _pad_to(c.astype(jnp.float32), rows, cols),
+        _pad_to(leaf.astype(jnp.float32), rows, cols),
+    ]
+    out = pl.pallas_call(
+        _kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)] * 5,
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out[:rows_, :cols_]

@@ -1,0 +1,54 @@
+"""``repro.sim`` — batched cycle-accurate simulation subsystem.
+
+Public surface:
+
+* :func:`repro.sim.batch.simulate_batch` / ``verify_mappings`` — verify
+  many mappings per vectorized backend call.
+* :class:`repro.sim.lower.CompiledSim` / ``lower_mapping`` — the flat
+  tensor form (JSON round-trippable).
+* ``repro.sim.check`` — the shared tolerance policy (``close``,
+  ``Tolerance``) and the batched-vs-scalar differential harness.
+
+The scalar oracle ``repro.core.simulate`` stays frozen as ground truth;
+everything here is judged against it (``check.assert_differential``, the
+``plaid-compile verify --parity`` CI gate).
+
+Exports resolve lazily so importing ``repro.sim`` (or
+``repro.core.simulate``, which pulls in ``repro.sim.check``) never drags
+in numpy-heavy lowering or jax unless actually used.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "close": "repro.sim.check",
+    "close_array": "repro.sim.check",
+    "Tolerance": "repro.sim.check",
+    "DEFAULT_TOL": "repro.sim.check",
+    "F32_TOL": "repro.sim.check",
+    "tolerance_for": "repro.sim.check",
+    "assert_differential": "repro.sim.check",
+    "scalar_verdict": "repro.sim.check",
+    "CompiledSim": "repro.sim.lower",
+    "LoweringUnsupported": "repro.sim.lower",
+    "lower_mapping": "repro.sim.lower",
+    "OPS": "repro.sim.lower",
+    "pack_bucket": "repro.sim.batch",
+    "simulate_batch": "repro.sim.batch",
+    "prepare_batch": "repro.sim.batch",
+    "PreparedBatch": "repro.sim.batch",
+    "verify_mappings": "repro.sim.batch",
+    "select_backend": "repro.sim.batch",
+    "SimVerdict": "repro.sim.batch",
+    "BatchResult": "repro.sim.batch",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,331 @@
+"""``simulate_batch`` — verify many mappings per vectorized call.
+
+The scalar oracle costs ~1 ms per mapping per verification; serving-tier
+policies like ``verify="always"`` and post-sweep re-verification multiply
+that by every artifact served.  This module buckets lowered mappings by
+padded shape, packs each bucket into dense tensors, and runs the whole
+bucket through one vectorized backend call (``repro.sim.step``), returning
+a per-mapping :class:`SimVerdict` with the same accept/reject decision —
+and, on accept, the same ``(node, iter) -> value`` map — as the scalar
+simulator.
+
+Parity is a hard guarantee, not an aspiration:
+
+* mappings the lowering cannot express (:class:`LoweringUnsupported`)
+  run through the scalar oracle itself, inside the same batch call;
+* ``backend="auto"`` resolves via ``REPRO_SIM_BACKEND`` (default
+  ``numpy``: float64, verdict/value-identical under ``DEFAULT_TOL``; the
+  jnp/Pallas backends compare under ``F32_TOL``);
+* the CI gate (``plaid-compile verify --parity``) diffs batched verdicts
+  against the scalar oracle over the full quick grid on every run.
+
+Packing: one bucket per call — per-cycle fixed overhead dominates batched
+cost on the numpy fast path, so splitting by shape only multiplies it.
+Mappings pad to the batch max in every dimension (node/step counts round
+up to a power of two so the jnp backend retraces rarely); the per-mapping
+``horizon`` masks the tail cycles of shorter members.
+
+Lowering is the expensive half of a cold call (it includes one
+``dfg.eval`` per mapping — comparable to a scalar simulation), so it is
+exposed separately: :func:`prepare_batch` lowers + packs once, and
+``simulate_batch(..., prepared=...)`` reruns the vectorized backend on the
+cached :class:`PreparedBatch` — the serving-tier shape for "verify the
+same artifacts again under a different backend / on every load".
+
+Fault injection: the ``sim.batch`` site fires at entry
+(``REPRO_FAULTS``), so chaos tests can crash/hang/OSError the batched
+verify path; ``CompileResult.simulate`` degrades to the scalar oracle on
+backend faults rather than serving unverified artifacts.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.compiler import faultinject
+from repro.sim.check import Tolerance, close_array, tolerance_for
+from repro.sim.lower import CompiledSim, LoweringUnsupported, lower_mapping
+from repro.sim.step import NEVER, PackedBucket, run_bucket
+
+ENV_BACKEND = "REPRO_SIM_BACKEND"
+BACKENDS = ("numpy", "jnp", "pallas")
+
+
+def select_backend(backend: str = "auto") -> str:
+    """Resolve ``auto`` via ``REPRO_SIM_BACKEND`` (default ``numpy`` —
+    float64 and fastest on CPU-only hosts; set ``jnp``/``pallas`` where an
+    accelerator makes the device call win)."""
+    if backend == "auto":
+        backend = os.environ.get(ENV_BACKEND, "") or "numpy"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown sim backend {backend!r} (choose from "
+            f"{', '.join(BACKENDS)} or 'auto')")
+    return backend
+
+
+class SimVerdict:
+    """One mapping's batched-verification outcome.
+
+    ``values`` materializes lazily: the ``(node, iter) -> value`` dict is
+    built from the backend's dense result on first access, so throughput
+    paths that only consume verdicts never pay for dict construction."""
+
+    __slots__ = ("ok", "reason", "backend", "_values", "_thunk")
+
+    def __init__(self, ok: bool, reason: Optional[str] = None,
+                 values: Optional[Dict[Tuple[int, int], float]] = None,
+                 backend: str = "numpy", values_thunk=None):
+        self.ok = ok
+        self.reason = reason                  # None iff ok
+        self.backend = backend                # what actually ran this one
+        self._values = values
+        self._thunk = values_thunk
+
+    @property
+    def values(self) -> Optional[Dict[Tuple[int, int], float]]:
+        if self._values is None and self._thunk is not None:
+            self._values = self._thunk()
+            self._thunk = None
+        return self._values
+
+    def __repr__(self) -> str:
+        return (f"SimVerdict(ok={self.ok!r}, reason={self.reason!r}, "
+                f"backend={self.backend!r})")
+
+
+class BatchResult(list):
+    """``list[SimVerdict]`` plus run metadata (backend, wall seconds,
+    bucket count, scalar fallbacks)."""
+
+    backend: str = "numpy"
+    wall_s: float = 0.0
+    n_buckets: int = 0
+    n_scalar_fallback: int = 0
+
+    @property
+    def mappings_per_s(self) -> float:
+        return len(self) / self.wall_s if self.wall_s > 0 else 0.0
+
+
+def _pow2(x: int) -> int:
+    n = 1
+    while n < x:
+        n <<= 1
+    return n
+
+
+def pack_bucket(forms: List[CompiledSim]) -> PackedBucket:
+    """Pad a batch's ``CompiledSim`` forms to common shape and stack.
+
+    Node and step counts round up to a power of two (floors 8 / 16) so
+    the jnp backend's shape-keyed trace cache stays warm across batches.
+
+    Sentinels (see ``repro.sim.step``): absent operand sources and padded
+    step producers point at node row ``N`` (reads 0.0, never done);
+    unmatched/padded step slots point at step row ``S`` (never available);
+    padded steps get ``step_abs = NEVER`` so no cycle fires them."""
+    B = len(forms)
+    I = forms[0].iterations
+    N = _pow2(max(max(cs.n_nodes for cs in forms), 8))
+    S = _pow2(max(max(cs.n_steps for cs in forms), 16))
+    K = max(cs.n_operands for cs in forms)
+    M = max(cs.n_matches for cs in forms)
+    hmax = max(cs.horizon for cs in forms)
+
+    ii = np.ones(B, dtype=np.int32)
+    horizon = np.zeros(B, dtype=np.int32)
+    opcode = np.zeros((B, N), dtype=np.int32)
+    exec_mask = np.zeros((B, N), dtype=bool)
+    issue = np.zeros((B, N), dtype=np.int32)
+    compare = np.zeros((B, N), dtype=bool)
+    leaf = np.zeros((B, N), dtype=np.float64)
+    ref = np.zeros((B, N, I), dtype=np.float64)
+    op_kind = np.zeros((B, N, K), dtype=np.int8)
+    op_src = np.full((B, N, K), N, dtype=np.int32)
+    op_dist = np.zeros((B, N, K), dtype=np.int32)
+    op_feed = np.zeros((B, N, K), dtype=np.float64)
+    op_steps = np.full((B, N, K, M), S, dtype=np.int32)
+    step_src = np.full((B, S), N, dtype=np.int32)
+    step_abs = np.full((B, S), NEVER, dtype=np.int32)
+
+    for b, cs in enumerate(forms):
+        n, s = cs.n_nodes, cs.n_steps
+        k, m = cs.n_operands, cs.n_matches
+        ii[b] = cs.ii
+        horizon[b] = cs.horizon
+        opcode[b, :n] = cs.opcode
+        exec_mask[b, :n] = cs.exec_mask
+        issue[b, :n] = cs.issue
+        compare[b, :n] = cs.compare
+        leaf[b, :n] = cs.leaf_base
+        ref[b, :n, :] = cs.ref
+        op_kind[b, :n, :k] = cs.op_kind
+        op_src[b, :n, :k] = np.where(cs.op_src >= 0, cs.op_src, N)
+        op_dist[b, :n, :k] = cs.op_dist
+        op_feed[b, :n, :k] = cs.op_feed
+        op_steps[b, :n, :k, :m] = np.where(cs.op_steps >= 0, cs.op_steps, S)
+        if s:
+            step_src[b, :s] = cs.step_src
+            step_abs[b, :s] = cs.step_abs
+    return PackedBucket(
+        iterations=I, hmax=hmax, ii=ii, horizon=horizon, opcode=opcode,
+        exec_mask=exec_mask, issue=issue, compare=compare, leaf=leaf,
+        ref=ref, op_kind=op_kind, op_src=op_src, op_dist=op_dist,
+        op_feed=op_feed, op_steps=op_steps, step_src=step_src,
+        step_abs=step_abs,
+    )
+
+
+@dataclass
+class PreparedBatch:
+    """Lowered + packed form of one ``mappings`` list: the reusable half
+    of a batched verification (build once with :func:`prepare_batch`,
+    rerun cheaply via ``simulate_batch(..., prepared=...)``)."""
+
+    iterations: int
+    n_mappings: int
+    scalar_idx: List[int]            # inputs needing the scalar oracle
+    batch_idx: List[int]             # inputs lowered into `forms`/`packed`
+    forms: List[CompiledSim]
+    packed: Optional[PackedBucket]   # None when every input fell back
+
+
+def prepare_batch(mappings, iterations: int = 4) -> PreparedBatch:
+    """Lower every mapping (``LoweringUnsupported`` ones are earmarked for
+    the scalar oracle) and pack the rest into one padded bucket."""
+    scalar_idx: List[int] = []
+    batch_idx: List[int] = []
+    forms: List[CompiledSim] = []
+    for i, m in enumerate(mappings):
+        try:
+            cs = lower_mapping(m, iterations=iterations)
+        except LoweringUnsupported:
+            scalar_idx.append(i)
+            continue
+        batch_idx.append(i)
+        forms.append(cs)
+    return PreparedBatch(
+        iterations=iterations, n_mappings=len(mappings),
+        scalar_idx=scalar_idx, batch_idx=batch_idx, forms=forms,
+        packed=pack_bucket(forms) if forms else None,
+    )
+
+
+def _values_thunk(val_b: np.ndarray, done_b: np.ndarray, node_ids):
+    def build() -> Dict[Tuple[int, int], float]:
+        return {
+            (node_ids[r], int(it)): float(val_b[r, it])
+            for r, it in np.argwhere(done_b)
+        }
+    return build
+
+
+def _bucket_verdicts(forms: List[CompiledSim], pb: PackedBucket,
+                     backend: str, tol: Tolerance) -> List[SimVerdict]:
+    val, done, read_fail = run_bucket(pb, backend)
+    # whole-batch checks (padding rows carry compare=False, so they never
+    # contribute); the per-form loop below only details the failures
+    cmpI = pb.compare[:, :, None]
+    missing = cmpI & ~done
+    bad = cmpI & done & ~close_array(val, pb.ref, tol)
+    missing_any = missing.any(axis=(1, 2))
+    bad_any = bad.any(axis=(1, 2))
+    out: List[SimVerdict] = []
+    for b, cs in enumerate(forms):
+        n = cs.n_nodes
+        if cs.fail_static is not None:
+            out.append(SimVerdict(False, cs.fail_static, backend=backend))
+        elif read_fail[b]:
+            out.append(SimVerdict(
+                False, "operand value not present at read time "
+                       "(missing / unrouted / mistimed route)",
+                backend=backend))
+        elif missing_any[b]:
+            r, it = np.argwhere(missing[b])[0]
+            out.append(SimVerdict(
+                False, f"node {cs.node_ids[r]} iter {it}: no value produced",
+                backend=backend))
+        elif bad_any[b]:
+            r, it = np.argwhere(bad[b])[0]
+            out.append(SimVerdict(
+                False,
+                f"node {cs.node_ids[r]} iter {it}: got {val[b, r, it]}, "
+                f"want {cs.ref[r, it]}", backend=backend))
+        else:
+            out.append(SimVerdict(
+                True, backend=backend,
+                values_thunk=_values_thunk(
+                    val[b, :n, :], done[b, :n, :], cs.node_ids)))
+    return out
+
+
+def _scalar_fallback(mapping, iterations: int) -> SimVerdict:
+    from repro.sim.check import scalar_verdict
+
+    ok, values, reason = scalar_verdict(mapping, iterations=iterations)
+    return SimVerdict(ok, reason=reason, values=values, backend="scalar")
+
+
+def simulate_batch(mappings, iterations: int = 4, backend: str = "auto",
+                   tol: Optional[Tolerance] = None,
+                   prepared: Optional[PreparedBatch] = None) -> BatchResult:
+    """Batched cycle-accurate verification (see module docstring).
+
+    Returns a :class:`BatchResult` — one :class:`SimVerdict` per input
+    mapping, in input order, plus throughput metadata.  Never raises on a
+    *failing mapping* (that is a ``False`` verdict); raises on backend /
+    environment faults (``OSError`` from fault injection, jax runtime
+    errors), which ``CompileResult.simulate`` treats as "degrade to the
+    scalar oracle".
+
+    Pass ``prepared`` (from :func:`prepare_batch` over the *same*
+    mappings/iterations) to skip the lowering + packing half and rerun
+    only the vectorized backend."""
+    t0 = time.perf_counter()
+    backend = select_backend(backend)
+    faultinject.check("sim.batch", f"batch={len(mappings)}")
+    tol = tol if tol is not None else tolerance_for(backend)
+
+    if prepared is None:
+        prepared = prepare_batch(mappings, iterations=iterations)
+    elif (prepared.n_mappings != len(mappings)
+          or prepared.iterations != iterations):
+        raise ValueError(
+            f"prepared batch is for {prepared.n_mappings} mappings x "
+            f"{prepared.iterations} iterations, got {len(mappings)} x "
+            f"{iterations}")
+
+    out = BatchResult([None] * len(mappings))
+    out.backend = backend
+    for i in prepared.scalar_idx:
+        out[i] = _scalar_fallback(mappings[i], iterations)
+    out.n_scalar_fallback = len(prepared.scalar_idx)
+    if prepared.packed is not None:
+        verdicts = _bucket_verdicts(
+            prepared.forms, prepared.packed, backend, tol)
+        for i, v in zip(prepared.batch_idx, verdicts):
+            out[i] = v
+        out.n_buckets = 1
+    out.wall_s = time.perf_counter() - t0
+    return out
+
+
+def verify_mappings(mappings, iterations: int = 3,
+                    backend: str = "auto") -> List[Dict[Tuple[int, int], float]]:
+    """Drop-in batched replacement for the per-mapping scalar verify loop
+    in ``CompileResult.simulate``: returns the per-mapping value dicts,
+    raising ``AssertionError`` on the first failing mapping (the same
+    disproof contract — and the same ``VERIFY_FAILURES`` membership — as
+    the scalar oracle)."""
+    verdicts = simulate_batch(mappings, iterations=iterations,
+                              backend=backend)
+    for i, v in enumerate(verdicts):
+        assert v.ok, (
+            f"mapping[{i}] failed batched verification "
+            f"({v.backend} backend): {v.reason}")
+    return [v.values for v in verdicts]

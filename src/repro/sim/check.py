@@ -1,0 +1,102 @@
+"""Shared numeric-tolerance policy + differential harness for the simulators.
+
+Both the scalar oracle (``repro.core.simulate``) and the batched backends
+(``repro.sim.batch``) accept a value iff :func:`close` does — a single
+mixed absolute/relative policy, so a large-magnitude workload (``gemm`` at
+high unroll grows values into the 1e5 range) cannot spuriously fail one
+backend while passing the other on the same mapping.
+
+The defaults are conservative for float64 arithmetic (the scalar simulator
+and the numpy backend); :data:`F32_TOL` is the looser policy the jnp /
+Pallas backends compare under, since they accumulate in float32.
+
+This module is **leaf-level** (numpy + stdlib only; no ``repro`` imports):
+``repro.core.simulate`` imports it at module scope without creating a
+cycle with the rest of ``repro.sim``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Tolerance:
+    """``|got - want| <= atol + rtol * |want|`` acceptance policy."""
+
+    atol: float = 1e-6
+    rtol: float = 1e-6
+
+
+#: scalar oracle + numpy backend (float64 end to end)
+DEFAULT_TOL = Tolerance()
+#: jnp / Pallas backends accumulate in float32; comparisons against the
+#: float64 reference need headroom for rounding over deep mul/mac chains
+F32_TOL = Tolerance(atol=1e-3, rtol=1e-4)
+
+
+def close(got: float, want: float, tol: Tolerance = DEFAULT_TOL) -> bool:
+    """Scalar acceptance under the shared mixed abs/rel policy."""
+    return abs(got - want) <= tol.atol + tol.rtol * abs(want)
+
+
+def close_array(got, want, tol: Tolerance = DEFAULT_TOL):
+    """Vectorized :func:`close`: elementwise boolean array."""
+    got = np.asarray(got, dtype=np.float64)
+    want = np.asarray(want, dtype=np.float64)
+    return np.abs(got - want) <= tol.atol + tol.rtol * np.abs(want)
+
+
+def tolerance_for(backend: str) -> Tolerance:
+    """The comparison policy a backend's results are judged under."""
+    return F32_TOL if backend in ("jnp", "pallas") else DEFAULT_TOL
+
+
+# -- differential harness ----------------------------------------------------
+
+
+def scalar_verdict(mapping, iterations: int = 4):
+    """Run the frozen scalar oracle on one mapping; returns
+    ``(ok, values_or_None, reason_or_None)`` instead of raising, so it can
+    be compared 1:1 against a batched verdict (including on deliberately
+    corrupted mappings, where both sides must *fail*, not crash)."""
+    from repro.core.simulate import simulate  # late: keeps check leaf-level
+
+    try:
+        values = simulate(mapping, iterations=iterations)
+    except (AssertionError, KeyError, ValueError, TypeError, IndexError) as e:
+        return False, None, f"{type(e).__name__}: {e}"
+    return True, values, None
+
+
+def assert_differential(mappings, iterations: int = 4, backend: str = "auto",
+                        tol: Tolerance = None) -> int:
+    """Assert the batched backend agrees with the scalar oracle on every
+    mapping: identical ok/fail verdicts, and (on ok) per-``(node, iter)``
+    values within the backend's tolerance.  Returns the number of mappings
+    checked; raises ``AssertionError`` with a per-mapping diagnosis on the
+    first divergence."""
+    from repro.sim.batch import simulate_batch  # late: keeps check leaf-level
+
+    verdicts = simulate_batch(mappings, iterations=iterations,
+                              backend=backend)
+    tol = tol if tol is not None else tolerance_for(verdicts.backend)
+    for i, (m, v) in enumerate(zip(mappings, verdicts)):
+        ok, values, reason = scalar_verdict(m, iterations=iterations)
+        assert v.ok == ok, (
+            f"mapping[{i}] ({m.dfg.name}, ii={m.ii}): verdict diverged — "
+            f"scalar {'ok' if ok else f'FAIL ({reason})'} vs batched "
+            f"{'ok' if v.ok else f'FAIL ({v.reason})'}"
+        )
+        if not ok:
+            continue
+        for key, want in values.items():
+            assert key in v.values, (
+                f"mapping[{i}]: batched values missing (node, iter)={key}")
+            got = v.values[key]
+            assert close(got, want, tol), (
+                f"mapping[{i}] (node, iter)={key}: batched {got} vs "
+                f"scalar {want} (atol={tol.atol}, rtol={tol.rtol})"
+            )
+    return len(mappings)

@@ -1,0 +1,259 @@
+"""``repro.sim`` — batched cycle-accurate verification vs the scalar oracle.
+
+The batched subsystem's contract is *parity*: for every mapping — valid or
+deliberately corrupted — ``simulate_batch`` must reach the same accept /
+reject decision as the frozen scalar simulator, and on accept the same
+per-``(node, iter)`` values.  These tests pin that contract:
+
+* lowering round-trips through JSON bit-identically;
+* packing pads to power-of-two shapes with the documented sentinels;
+* all three backends (numpy / jnp / pallas) pass the differential harness
+  on real kernel mappings, including a recurrence (distance > 0) workload;
+* random DAGs fuzz the same property through the hypothesis shim;
+* corrupted mappings (dropped route, foreign place key, shifted issue)
+  fail — or survive — identically on both sides;
+* ``prepare_batch`` warm reruns reproduce the cold verdicts, and a stale
+  ``PreparedBatch`` is rejected loudly;
+* an injected backend fault (``sim.batch`` site) degrades
+  ``CompileResult.simulate`` to the scalar oracle instead of serving an
+  unverified artifact.
+"""
+import copy
+import json
+
+import pytest
+
+from _hypothesis_shim import given, settings, strategies as st
+
+from repro.compiler import compile, faultinject
+from repro.core.arch import make_arch
+from repro.core.dfg import random_dag
+from repro.core.mapper import HierarchicalMapper, NodeGreedyMapper
+from repro.core.simulate import simulate
+from repro.sim import (
+    CompiledSim,
+    LoweringUnsupported,
+    lower_mapping,
+    pack_bucket,
+    prepare_batch,
+    simulate_batch,
+    verify_mappings,
+)
+from repro.sim.check import DEFAULT_TOL, close, assert_differential
+from repro.sim.step import NEVER
+
+# (workload, unroll): atax_u2 is the quick-grid staple, dwconv_u1 a deep
+# mul/mac chain, jacobi_u1 carries a distance>0 recurrence edge
+KERNELS = [("atax", 2), ("dwconv", 1), ("jacobi", 1)]
+
+
+@pytest.fixture(scope="module")
+def mappings(workload_dfg, arch):
+    out = []
+    for name, unroll in KERNELS:
+        m = HierarchicalMapper(arch("plaid2x2"), seed=0).map(
+            workload_dfg(name, unroll))
+        assert m is not None, f"{name}_u{unroll} failed to map"
+        m.validate()
+        out.append(m)
+    return out
+
+
+# -- lowering ----------------------------------------------------------------
+
+
+def test_lowering_json_roundtrip(mappings):
+    for m in mappings:
+        cs = lower_mapping(m, iterations=3)
+        # through real JSON text, not just the dict view
+        back = CompiledSim.from_json(json.loads(json.dumps(cs.to_json())))
+        assert back.ii == cs.ii and back.horizon == cs.horizon
+        assert back.iterations == cs.iterations
+        assert back.node_ids == cs.node_ids
+        assert back.fail_static == cs.fail_static
+        for f in (CompiledSim._INT_FIELDS + CompiledSim._BOOL_FIELDS
+                  + CompiledSim._F64_FIELDS + ("op_kind",)):
+            got, want = getattr(back, f), getattr(cs, f)
+            assert got.shape == want.shape, f
+            assert (got == want).all(), f
+    # a non-record payload is rejected by schema, not mis-parsed
+    with pytest.raises(ValueError, match="compiled@1"):
+        CompiledSim.from_json({"schema": "something/else"})
+
+
+def test_lowering_covers_recurrence(mappings):
+    # the batch genuinely exercises distance > 0 (loop-carried) operands
+    assert any(e.distance > 0 for m in mappings for e in m.dfg.edges)
+    for m in mappings:
+        if not any(e.distance > 0 for e in m.dfg.edges):
+            continue
+        cs = lower_mapping(m, iterations=3)
+        assert (cs.op_dist > 0).any()
+
+
+def test_lowering_rejects_negative_distance(mappings):
+    # the static-availability derivation assumes dist >= 0; a corrupted
+    # edge must route to the scalar oracle, not silently mis-verify
+    mm = copy.deepcopy(mappings[0])
+    idx = next(iter(mm.routes))
+    mm.dfg.edges[idx].distance = -1
+    with pytest.raises(LoweringUnsupported, match="negative distance"):
+        lower_mapping(mm, iterations=3)
+    res = simulate_batch([mm], iterations=3)
+    assert res.n_scalar_fallback == 1
+    assert res[0].backend == "scalar"
+
+
+# -- packing -----------------------------------------------------------------
+
+
+def test_pack_bucket_pow2_padding_and_sentinels(mappings):
+    forms = [lower_mapping(m, iterations=3) for m in mappings]
+    pb = pack_bucket(forms)
+    B, N = pb.opcode.shape
+    S = pb.step_src.shape[1]
+    assert B == len(forms)
+    # power-of-two with floors 8/16, covering the largest member
+    assert N >= max(8, max(cs.n_nodes for cs in forms))
+    assert S >= max(16, max(cs.n_steps for cs in forms))
+    assert N & (N - 1) == 0 and S & (S - 1) == 0
+    for b, cs in enumerate(forms):
+        n, s = cs.n_nodes, cs.n_steps
+        # padded node rows never execute, never compare, read as 0.0
+        assert not pb.exec_mask[b, n:].any()
+        assert not pb.compare[b, n:].any()
+        # absent operand sources point at sentinel row N
+        assert (pb.op_src[b, n:] == N).all()
+        # padded step slots never become available
+        assert (pb.step_src[b, s:] == N).all()
+        assert (pb.step_abs[b, s:] == NEVER).all()
+    # sanity: padding changed shapes but not verdicts
+    for v in simulate_batch(mappings, iterations=3):
+        assert v.ok, v.reason
+
+
+def test_pack_single_tiny_mapping():
+    # a minimal DAG still pads up to the 8/16 floors and verifies
+    g = random_dag(3, seed=7)
+    m = NodeGreedyMapper(make_arch("plaid2x2"), seed=0).map(g)
+    if m is None:
+        pytest.skip("tiny DAG did not map")
+    pb = pack_bucket([lower_mapping(m, iterations=3)])
+    assert pb.opcode.shape[1] >= 8 and pb.step_src.shape[1] >= 16
+    assert_differential([m], iterations=3)
+
+
+# -- differential parity -----------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jnp", "pallas"])
+def test_differential_all_backends(mappings, backend):
+    assert assert_differential(mappings, iterations=3,
+                               backend=backend) == len(mappings)
+
+
+def test_values_match_oracle_and_materialize_lazily(mappings):
+    res = simulate_batch(mappings, iterations=3, backend="numpy")
+    for m, v in zip(mappings, res):
+        assert v.ok
+        assert v._values is None          # throughput paths never pay this
+        want = simulate(m, iterations=3)
+        got = v.values                    # first access builds the dict
+        assert v._values is got
+        assert set(got) == set(want)
+        for key, w in want.items():
+            assert close(got[key], w, DEFAULT_TOL), (key, got[key], w)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(6, 14))
+def test_fuzz_random_dag_parity(seed, n):
+    g = random_dag(n, seed=seed)
+    m = NodeGreedyMapper(make_arch("plaid2x2"), seed=0).map(g)
+    if m is None:
+        return
+    assert_differential([m], iterations=3)
+
+
+def test_corrupted_mappings_fail_identically(mappings):
+    good = mappings[0]
+
+    dropped = copy.deepcopy(good)
+    dropped.routes.pop(next(iter(dropped.routes)))
+
+    foreign = copy.deepcopy(good)
+    foreign.place[99999] = 0
+
+    shifted = copy.deepcopy(good)
+    nid = next(iter(shifted.time))
+    shifted.time[nid] += 1
+
+    # parity is the assertion: each corrupted form must get the SAME
+    # verdict from both engines (assert_differential raises on divergence)
+    batch = [good, dropped, foreign, shifted]
+    assert_differential(batch, iterations=3)
+    res = simulate_batch(batch, iterations=3)
+    assert res[0].ok
+    assert not res[1].ok and "not present at read time" in res[1].reason
+    assert not res[2].ok and "unknown node 99999" in res[2].reason
+
+
+def test_verify_mappings_raises_on_disproof(mappings):
+    bad = copy.deepcopy(mappings[0])
+    bad.routes.pop(next(iter(bad.routes)))
+    values = verify_mappings(mappings, iterations=3)
+    assert len(values) == len(mappings) and all(values)
+    with pytest.raises(AssertionError, match=r"mapping\[1\]"):
+        verify_mappings([mappings[0], bad], iterations=3)
+
+
+# -- prepared reruns ---------------------------------------------------------
+
+
+def test_prepared_batch_warm_rerun_matches_cold(mappings):
+    cold = simulate_batch(mappings, iterations=3)
+    pb = prepare_batch(mappings, iterations=3)
+    warm1 = simulate_batch(mappings, iterations=3, prepared=pb)
+    warm2 = simulate_batch(mappings, iterations=3, prepared=pb)
+    for c, w1, w2 in zip(cold, warm1, warm2):
+        assert c.ok == w1.ok == w2.ok
+        assert c.reason == w1.reason == w2.reason
+        # warm runs reuse the backend's buffers; values must not alias
+        assert w1.values == w2.values == c.values
+
+
+def test_prepared_batch_mismatch_rejected(mappings):
+    pb = prepare_batch(mappings, iterations=3)
+    with pytest.raises(ValueError, match="prepared batch"):
+        simulate_batch(mappings[:-1], iterations=3, prepared=pb)
+    with pytest.raises(ValueError, match="prepared batch"):
+        simulate_batch(mappings, iterations=4, prepared=pb)
+
+
+# -- fault injection / degradation -------------------------------------------
+
+
+def test_sim_batch_fault_site_fires(mappings):
+    with faultinject.inject({"mode": "oserror", "site": "sim.batch"}):
+        with pytest.raises(OSError):
+            simulate_batch(mappings, iterations=3)
+    # the context manager cleans up: the very next call is healthy
+    assert all(v.ok for v in simulate_batch(mappings, iterations=3))
+
+
+def test_compile_result_degrades_to_scalar_on_backend_fault(capsys):
+    res = compile("atax", unroll=2)
+    assert res.mappings
+    # a multi-segment artifact routes through the batched backend
+    res.mappings = res.mappings + [copy.deepcopy(res.mappings[0])]
+    want = res.simulate(iterations=3)
+    assert len(want) == 2
+    with faultinject.inject({"mode": "oserror", "site": "sim.batch"}):
+        got = res.simulate(iterations=3)
+    err = capsys.readouterr()
+    assert "degrading to the scalar" in err.out
+    # degraded result is still fully verified: same values, scalar engine
+    assert len(got) == 2
+    for g, w in zip(got, want):
+        assert set(g) == set(w)
+        assert all(close(g[k], w[k], DEFAULT_TOL) for k in w)
