@@ -128,6 +128,73 @@ assert rec["verified"] == {"plaid": True, "st": True}, rec["verified"]
 print("chaos gate: torn grid healed bit-identically to golden")
 EOF
 
+echo "== farm chaos gate: kill -9 the serve daemon mid-sweep, restart, heal =="
+FARM_STORE=$(mktemp -d /tmp/ci_farm_store.XXXXXX)
+FARM_SOCK="/tmp/ci_farm.$$.sock"
+FARM_LOG=$(mktemp /tmp/ci_farm_log.XXXXXX)
+G1=$(mktemp /tmp/ci_farm_r1.XXXXXX.json); rm -f "$G1"
+G2=$(mktemp /tmp/ci_farm_r2.XXXXXX.json); rm -f "$G2"
+G3=$(mktemp /tmp/ci_farm_r3.XXXXXX.json); rm -f "$G3"
+python -m repro.compiler serve --dir "$FARM_STORE" --socket "$FARM_SOCK" \
+    --workers 2 >"$FARM_LOG" 2>&1 &
+FARM_PID=$!
+for _ in $(seq 100); do [ -S "$FARM_SOCK" ] && break; sleep 0.1; done
+[ -S "$FARM_SOCK" ] || { echo "farm gate: daemon never bound its socket"; cat "$FARM_LOG"; exit 1; }
+# cold sweep through the farm with the daemon murdered mid-flight: the
+# client's bounded retries + circuit breaker must degrade the remaining
+# cells to local compiles — the sweep completes with golden IIs either way
+timeout "$BUDGET" python -m repro.core.collect --quick --out "$G1" \
+    --remote "$FARM_SOCK" &
+SWEEP_PID=$!
+sleep 1
+kill -9 "$FARM_PID" 2>/dev/null || true
+wait "$SWEEP_PID"
+python scripts/diff_ii.py "$G1" tests/golden_ii_quick.json
+# restart over the stale socket + uncompacted journal: the journaled index
+# heals on open, and whatever the first daemon cached survived the kill -9
+python -m repro.compiler serve --dir "$FARM_STORE" --socket "$FARM_SOCK" \
+    --workers 2 >"$FARM_LOG" 2>&1 &
+FARM_PID=$!
+for _ in $(seq 100); do [ -S "$FARM_SOCK" ] && break; sleep 0.1; done
+[ -S "$FARM_SOCK" ] || { echo "farm gate: daemon did not restart over stale socket"; cat "$FARM_LOG"; exit 1; }
+timeout "$BUDGET" python -m repro.core.collect --quick --out "$G2" \
+    --remote "$FARM_SOCK"
+python scripts/diff_ii.py "$G2" tests/golden_ii_quick.json
+# third pass: every cell must be served warm from the healed store; the
+# farm throughput entry lands in the repo bench trajectory
+timeout "$BUDGET" python -m repro.core.collect --quick --out "$G3" \
+    --remote "$FARM_SOCK" --bench-out BENCH_mapper.json \
+    --bench-note "ci farm gate (warm)"
+python scripts/diff_ii.py "$G3" tests/golden_ii_quick.json
+python - "$G2" "$G3" <<'EOF'
+import json, sys
+r2, r3 = (json.load(open(p)) for p in sys.argv[1:3])
+for w, rec in r3.items():
+    assert rec["ii"] == r2[w]["ii"], (w, rec["ii"], r2[w]["ii"])
+last = json.load(open("BENCH_mapper.json"))["runs"][-1]
+st = last["store"]
+assert st["misses"] == 0 and st["hit_rate"] == 1.0, f"warm farm pass not 100% hits: {st}"
+farm = last["farm"]
+assert farm["served"] > 0 and farm["served_per_s"] > 0, farm
+print(f"farm gate: healed bit-identically; {st['hits']} warm hits at "
+      f"{farm['served_per_s']} served/s")
+EOF
+# graceful drain: SIGTERM must finish in-flight work, compact the journal,
+# remove the socket, and exit 0
+kill -TERM "$FARM_PID"
+wait "$FARM_PID"
+[ ! -S "$FARM_SOCK" ] || { echo "farm gate: socket left behind after drain"; exit 1; }
+python - "$FARM_STORE" <<'EOF'
+import json, os, sys
+store = sys.argv[1]
+snap = json.load(open(os.path.join(store, "index.json")))
+jsize = os.path.getsize(os.path.join(store, "journal.jsonl"))
+assert snap["entries"], "drained store lost its entries"
+assert jsize < 200, f"journal not compacted on drain ({jsize} bytes)"
+print(f"farm gate: drained clean — {len(snap['entries'])} rows snapshotted, "
+      f"journal {jsize}B")
+EOF
+
 echo "== perf smoke: quick wall time vs last recorded run =="
 python scripts/perf_smoke.py BENCH_mapper.json --max-ratio 2.0
 

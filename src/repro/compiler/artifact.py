@@ -12,12 +12,13 @@ the configuration against the DFG oracle — **without re-running place &
 route**.  This is what lets a results cache / serving tier hand out mappings
 and still prove them correct on the consumer side.
 
-Schema (``repro.compiler/artifact@4``; ``@1``–``@3`` artifacts still load —
+Schema (``repro.compiler/artifact@5``; ``@1``–``@4`` artifacts still load —
 ``route_cache``, the place/route/negotiate timing keys, the uniform
-per-pass stats, and the ``degraded`` provenance block are simply absent)::
+per-pass stats, the ``degraded`` provenance block, and the
+``compiled_sim`` forms are simply absent)::
 
     {
-      "schema":   "repro.compiler/artifact@4",
+      "schema":   "repro.compiler/artifact@5",
       "workload": {"name", "unroll", "iterations", "domain"}
                   | {"dfg_name", "iterations", "dfg_sha256"},  # raw-DFG input
       "arch":     "plaid2x2",          # registered arch name
@@ -37,6 +38,10 @@ per-pass stats, and the ``degraded`` provenance block are simply absent)::
       "mappings": [{"dfg": DFG.to_json(), "ii", "place", "time", "routes",
                     "makespan"}],      # one per segment (spatial) else one
       "spatial":  {"segments", "extra_mem_ops", "analytic"} | null,
+      "compiled_sim": null | {         # repro.sim lowered forms (PR 8):
+          "iterations": int,           #   ref-oracle trip count lowered for
+          "mappings_sha256": str,      #   binds forms to `mappings` content
+          "forms": [CompiledSim.to_json() | null]},  # null = unlowerable
       "verified": true | false | null, # null = verification not requested
       "degraded": null | {             # graceful-degradation provenance:
           "requested_mapper": str,     #   the mapper the caller asked for
@@ -62,13 +67,15 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-ARTIFACT_SCHEMA = "repro.compiler/artifact@4"
+ARTIFACT_SCHEMA = "repro.compiler/artifact@5"
 #: schemas ``load()`` accepts; @1 predates the placement engine (PR 3) and
 #: simply lacks route_cache / the per-stage P&R timing keys, @2 predates
 #: the repro.mapping pass pipeline (PR 5) and lacks the per-pass stats,
-#: @3 predates graceful degradation (PR 6) and lacks the degraded block
+#: @3 predates graceful degradation (PR 6) and lacks the degraded block,
+#: @4 predates the serving farm (PR 8) and lacks the compiled_sim forms
 SUPPORTED_SCHEMAS = ("repro.compiler/artifact@1", "repro.compiler/artifact@2",
-                     "repro.compiler/artifact@3", ARTIFACT_SCHEMA)
+                     "repro.compiler/artifact@3", "repro.compiler/artifact@4",
+                     ARTIFACT_SCHEMA)
 # 0.4.0: mapper decomposition into repro.mapping + pathfinder negotiation
 # default flipped to "selective" (a mapper-behavior change: store keys must
 # namespace away from 0.3.x artifacts)
@@ -156,6 +163,13 @@ class CompileResult:
     motifs: Optional[Dict[str, int]] = None
     mappings: List[Dict[str, object]] = field(default_factory=list)
     spatial: Optional[Dict[str, object]] = None
+    #: lowered ``repro.sim`` forms of ``mappings`` (see module docstring):
+    #: lets a verify-on-load consumer (the serve daemon above all) skip the
+    #: lowering + ``dfg.eval`` half of a batched verification.  Bound to
+    #: the mapping content by ``mappings_sha256`` — a mismatch (edited or
+    #: tampered mappings) falls back to fresh lowering, so the forms can
+    #: never vouch for a mapping they were not lowered from.
+    compiled_sim: Optional[Dict[str, object]] = None
     verified: Optional[bool] = None
     #: graceful-degradation provenance (see module docstring); non-null
     #: means ``mapper`` is the fallback that ran, not the requested mapper
@@ -202,6 +216,7 @@ class CompileResult:
             "motifs": self.motifs,
             "mappings": self.mappings,
             "spatial": self.spatial,
+            "compiled_sim": self.compiled_sim,
             "verified": self.verified,
             "degraded": self.degraded,
             "provenance": self.provenance,
@@ -231,6 +246,7 @@ class CompileResult:
             motifs=data.get("motifs"),
             mappings=mappings,
             spatial=data.get("spatial"),
+            compiled_sim=data.get("compiled_sim"),
             verified=data.get("verified"),
             degraded=data.get("degraded"),
             provenance=data.get("provenance") or {},
@@ -256,6 +272,75 @@ class CompileResult:
         """Live, validated :class:`Mapping` objects for every stored record
         (one per spatial segment; exactly one for modulo mappers)."""
         return [mapping_from_record(rec, self.arch) for rec in self.mappings]
+
+    def populate_compiled_sim(self, iterations: int = 3) -> bool:
+        """Lower the stored mappings into ``repro.sim`` tensor form and
+        attach them as ``compiled_sim`` (segments the lowering cannot
+        express are recorded as ``null`` and keep using the scalar
+        oracle).  Returns ``False`` — leaving the artifact unchanged —
+        when there is nothing lowerable; never raises: the forms are an
+        accelerator, not a requirement."""
+        from repro.compiler.fsio import sha256_of_json
+        from repro.sim.lower import LoweringUnsupported, lower_mapping
+
+        if not self.mappings:
+            return False
+        try:
+            rebuilt = self.rebuild_mappings()
+        except (ValueError, KeyError):
+            return False
+        forms: List[Optional[Dict[str, object]]] = []
+        for m in rebuilt:
+            try:
+                forms.append(lower_mapping(m, iterations=iterations)
+                             .to_json())
+            except LoweringUnsupported:
+                forms.append(None)
+        self.compiled_sim = {
+            "iterations": iterations,
+            "mappings_sha256": sha256_of_json(self.mappings),
+            "forms": forms,
+        }
+        return True
+
+    def _stored_prepared(self, iterations: int):
+        """Rebuild a ``repro.sim`` :class:`PreparedBatch` from the
+        artifact's ``compiled_sim`` forms, or ``None`` when they are
+        absent, lowered for a different trip count, malformed, or no
+        longer bound to the mapping content (``mappings_sha256``
+        mismatch) — every ``None`` means "lower freshly"."""
+        cs = self.compiled_sim
+        if not isinstance(cs, dict) or not self.mappings:
+            return None
+        if cs.get("iterations") != iterations:
+            return None
+        forms_json = cs.get("forms")
+        if not isinstance(forms_json, list) \
+                or len(forms_json) != len(self.mappings):
+            return None
+        from repro.compiler.fsio import sha256_of_json
+
+        if cs.get("mappings_sha256") != sha256_of_json(self.mappings):
+            return None
+        from repro.sim.batch import PreparedBatch, pack_bucket
+        from repro.sim.lower import CompiledSim
+
+        scalar_idx: List[int] = []
+        batch_idx: List[int] = []
+        forms = []
+        try:
+            for i, fj in enumerate(forms_json):
+                if fj is None:
+                    scalar_idx.append(i)
+                else:
+                    batch_idx.append(i)
+                    forms.append(CompiledSim.from_json(fj))
+        except (KeyError, TypeError, ValueError):
+            return None
+        return PreparedBatch(
+            iterations=iterations, n_mappings=len(self.mappings),
+            scalar_idx=scalar_idx, batch_idx=batch_idx, forms=forms,
+            packed=pack_bucket(forms) if forms else None)
 
     def simulate(self, iterations: int = 3) -> List[Dict[Tuple[int, int], float]]:
         """Cycle-accurately execute the stored mapping(s) against the DFG
@@ -284,11 +369,13 @@ class CompileResult:
                 "to simulate"
             )
         rebuilt = self.rebuild_mappings()
-        if len(rebuilt) > 1:
+        prepared = self._stored_prepared(iterations)
+        if len(rebuilt) > 1 or prepared is not None:
             from repro.sim.batch import verify_mappings
 
             try:
-                return verify_mappings(rebuilt, iterations=iterations)
+                return verify_mappings(rebuilt, iterations=iterations,
+                                       prepared=prepared)
             except AssertionError:
                 raise  # a genuine disproof — exactly what verify is for
             except (OSError, RuntimeError) as e:

@@ -14,6 +14,10 @@ Subcommands:
 * ``store``    — the content-addressed mapping store (serving tier):
   ``get``/``put``/``ls``/``gc``/``warm``.  ``warm`` batch-compiles a
   workload × job grid into the store so later compiles are pure hits.
+* ``serve``    — long-lived compile-farm daemon over a Unix socket
+  (``repro.serve_farm``): cache-first, in-flight dedup, bounded queue
+  with typed load-shedding, supervised workers, SIGTERM drain.
+  ``compile --remote <socket>`` / ``collect --remote`` are the clients.
 
 Examples::
 
@@ -28,6 +32,9 @@ Examples::
         --out served.json
     plaid-compile store ls --dir /var/plaid/store
     plaid-compile store gc --dir /var/plaid/store --max-bytes 50000000
+    plaid-compile serve --dir /var/plaid/store --socket /run/plaid.sock &
+    plaid-compile compile atax -u 2 --job plaid --store /var/plaid/store \
+        --remote /run/plaid.sock
 """
 from __future__ import annotations
 
@@ -204,6 +211,7 @@ def _compile_one(args, arch: str, mapper: str, job: Optional[str],
         iterations=args.iterations,
         verify=args.verify,
         store=store,
+        remote=getattr(args, "remote", None),
         deadline_s=args.deadline_s,
         fallback_mapper=args.fallback_mapper,
     )
@@ -646,6 +654,20 @@ def _cmd_store_warm(args) -> int:
     return 0
 
 
+def _cmd_serve(args) -> int:
+    """Run the compile-farm daemon (blocks until SIGTERM/SIGINT drain)."""
+    from repro.serve_farm.daemon import serve
+
+    return serve(
+        args.dir, args.socket,
+        workers=args.workers,
+        queue_limit=args.queue_limit,
+        default_deadline_s=args.deadline_s,
+        retries=args.retries,
+        start_method=args.start_method,
+    )
+
+
 def _cmd_store(args) -> int:
     return {
         "get": _cmd_store_get,
@@ -699,6 +721,10 @@ def build_parser() -> argparse.ArgumentParser:
     c.add_argument("--store", default=None, metavar="DIR",
                    help="artifact store: serve a cached mapping without "
                         "P&R, insert on miss")
+    c.add_argument("--remote", default=None, metavar="SOCKET",
+                   help="plaid-compile serve socket: offload cache misses "
+                        "to the farm daemon (retries with backoff; falls "
+                        "back to a local compile when unreachable)")
     c.add_argument("--deadline-s", type=float, default=None, metavar="S",
                    help="wall-clock P&R deadline; exceeding it raises "
                         "CompileTimeout (exit code 12) unless "
@@ -791,6 +817,30 @@ def build_parser() -> argparse.ArgumentParser:
     wm.add_argument("--job", default=None, help="restrict to one grid job")
     wm.add_argument("--seed", type=int, default=0)
 
+    sv = sub.add_parser("serve",
+                        help="compile-farm daemon over a Unix socket "
+                             "(cache-first, dedup, load-shedding, "
+                             "SIGTERM drain)")
+    sv.add_argument("--dir", default="artifacts/store",
+                    help="artifact store the farm serves from and compiles "
+                         "into (default artifacts/store)")
+    sv.add_argument("--socket", required=True, metavar="PATH",
+                    help="Unix-domain socket path to listen on")
+    sv.add_argument("--workers", type=int, default=2,
+                    help="supervised compile worker threads (default 2)")
+    sv.add_argument("--queue-limit", type=int, default=8,
+                    help="max queued+running jobs before load-shedding "
+                         "with ServiceOverloaded (default 8)")
+    sv.add_argument("--deadline-s", type=float, default=600.0, metavar="S",
+                    help="per-request compile deadline when the client "
+                         "sends none (default 600)")
+    sv.add_argument("--retries", type=int, default=1,
+                    help="re-attempts for crashed compile workers "
+                         "(default 1)")
+    sv.add_argument("--start-method", default=None,
+                    choices=("fork", "spawn", "forkserver"),
+                    help="worker multiprocessing start method")
+
     return ap
 
 
@@ -799,7 +849,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     miss), 2 usage error.  Taxonomy failures map to distinct codes 10+
     (``repro.compiler.errors``): 10 CompileError, 11 MappingInfeasible,
     12 CompileTimeout, 13 WorkerCrashed, 14 StoreIOError, 15 ArtifactError,
-    16 LockTimeout — so shell callers can branch on *what* failed.
+    16 LockTimeout, 17 ServiceOverloaded, 18 FarmUnavailable — so shell
+    callers can branch on *what* failed.
     ``--debug`` re-raises instead, preserving the full traceback."""
     args = build_parser().parse_args(argv)
     handler = {
@@ -809,6 +860,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         "verify": _cmd_verify,
         "diff": _cmd_diff,
         "store": _cmd_store,
+        "serve": _cmd_serve,
     }[args.cmd]
     try:
         return handler(args)

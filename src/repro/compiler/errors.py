@@ -23,6 +23,11 @@ class                     meaning
                             or structurally unloadable
 :class:`LockTimeout`        an advisory ``flock`` could not be acquired
                             within its timeout (dead lock-holder)
+:class:`ServiceOverloaded`  the compile-farm daemon shed the request (its
+                            bounded job queue was full)
+:class:`FarmUnavailable`    the compile-farm daemon is unreachable after
+                            bounded retries (clients fall back to a local
+                            compile)
 ========================  ===================================================
 
 Dual inheritance keeps old call sites working: code that caught
@@ -164,6 +169,39 @@ class LockTimeout(CompileError, TimeoutError):
     write + warning) rather than hang."""
 
     exit_code = 16
+
+
+class ServiceOverloaded(CompileError):
+    """The compile-farm daemon shed this request: its bounded job queue
+    was full.  Explicit load-shedding, not a hang — clients retry with
+    backoff or fall back to a local compile."""
+
+    exit_code = 17
+
+    def __init__(self, message: str = "", *,
+                 queue_depth: Optional[int] = None,
+                 queue_limit: Optional[int] = None, **details: object):
+        super().__init__(message, **details)
+        self.queue_depth = queue_depth
+        self.queue_limit = queue_limit
+
+    def to_json(self) -> Dict[str, object]:
+        out = super().to_json()
+        if self.queue_depth is not None:
+            out["queue_depth"] = self.queue_depth
+        if self.queue_limit is not None:
+            out["queue_limit"] = self.queue_limit
+        return out
+
+
+class FarmUnavailable(CompileError, ConnectionError):
+    """The compile-farm daemon could not be reached (connection refused /
+    reset, dead socket, protocol violation) after the client's bounded
+    retries — or its circuit breaker is open.  ``compile(..., remote=)``
+    treats this as "degrade to a local compile", so a dying daemon slows
+    a sweep down but never fails it."""
+
+    exit_code = 18
 
 
 #: Exceptions that mean "this stored/served mapping is disproven or

@@ -165,6 +165,55 @@ def compile_key(
     return CompileKey.make(info, arch_name, mapper_name, seed, budget)
 
 
+def serve_from_store(store: ArtifactStore, key: CompileKey, *,
+                     verify: bool = False) -> Optional[CompileResult]:
+    """The cache-first leg of :func:`compile`, shared with the farm
+    daemon: look ``key`` up in ``store`` and return the artifact marked
+    ``store_hit``, or ``None`` on a miss (including a store read error,
+    which degrades to a cold compile with a warning).
+
+    With ``verify=True`` an unverified hit is re-proven before being
+    served: the index verdict is trusted when present, otherwise the
+    mapping is replayed through the simulator (reusing the artifact's
+    stored :mod:`repro.sim` lowered forms when present) and the verdict
+    persisted; a disproven artifact is quarantined and reported as a
+    miss so the caller recompiles.
+    """
+    try:
+        cached = store.get(key)
+    except OSError as e:  # StoreIOError included — degrade to cold
+        print(f"warning: artifact store read failed ({e}); "
+              f"compiling without the cache", flush=True)
+        return None
+    if cached is not None and verify and cached.verified is not True \
+            and cached.mappings:
+        # the caller asked for a verification verdict and the stored
+        # artifact predates one — replay it now (no P&R).  Store
+        # content is untrusted: a digest-consistent but wrong or
+        # unsimulatable record (tampered-and-redigested entry, null-ii
+        # segment, dangling route reference) can raise AssertionError/
+        # ValueError/KeyError — all mean the mapping is disproven, so
+        # quarantine it and fall through to a fresh compile (the same
+        # self-heal the store's own verify policies apply)
+        if store.is_verified(key):
+            # a previous serve (or a put of a proven artifact) already
+            # recorded the verdict in the index — don't re-prove it on
+            # every warm sweep
+            cached.verified = True
+        else:
+            try:
+                cached.simulate(iterations=3)
+                cached.verified = True
+                store.mark_verified(key)  # persist: nobody re-runs
+            except VERIFY_FAILURES:
+                store.counters.verify_failures += 1
+                store.discard(key)
+                cached = None
+    if cached is not None:
+        cached.store_hit = True
+    return cached
+
+
 def _unit_stats(mapper_obj) -> Optional[Dict[str, int]]:
     """Motif-cover statistics of the unit decomposition the mapper actually
     used (the ``PassContext.units_for`` cache, surfaced by the unit
@@ -200,6 +249,7 @@ def compile(
     iterations: Optional[int] = None,
     verify: bool = False,
     store: Optional[Union[str, ArtifactStore]] = None,
+    remote: Optional[str] = None,
     deadline_s: Optional[float] = None,
     fallback_mapper: Optional[str] = None,
     fallback_deadline_s: Optional[float] = None,
@@ -222,6 +272,17 @@ def compile(
     II, and cycles to the compile it replaces.  Store I/O failures are
     survivable: an unreadable store degrades to a cold compile and an
     unwritable one to an uncached result, each with a warning.
+
+    ``remote`` (a Unix-socket path) offloads a cache miss to a
+    ``plaid-compile serve`` farm daemon (:mod:`repro.serve_farm`)
+    instead of compiling locally: the request is retried with bounded
+    exponential backoff, and when the farm stays unreachable (circuit
+    breaker open, daemon draining) the compile **falls back to local**
+    with a warning rather than failing the sweep.  A farm-side overload
+    shed (:class:`~repro.compiler.errors.ServiceOverloaded`) that
+    outlasts the retries propagates typed.  Raw ``DFG`` inputs are never
+    farmed (the protocol ships workload names, not graphs) and compile
+    locally with a warning.
 
     ``deadline_s`` bounds place & route by wall clock: mappers built on
     the ``repro.mapping`` pass pipeline check it cooperatively (between
@@ -260,39 +321,25 @@ def compile(
         store = open_store(store)
         key = CompileKey.make(workload_info, arch_name, mapper_name, seed,
                               budget)
-        try:
-            cached = store.get(key)
-        except OSError as e:  # StoreIOError included — degrade to cold
-            print(f"warning: artifact store read failed ({e}); "
-                  f"compiling without the cache", flush=True)
-            cached = None
-        if cached is not None and verify and cached.verified is not True \
-                and cached.mappings:
-            # the caller asked for a verification verdict and the stored
-            # artifact predates one — replay it now (no P&R).  Store
-            # content is untrusted: a digest-consistent but wrong or
-            # unsimulatable record (tampered-and-redigested entry, null-ii
-            # segment, dangling route reference) can raise AssertionError/
-            # ValueError/KeyError — all mean the mapping is disproven, so
-            # quarantine it and fall through to a fresh compile (the same
-            # self-heal the store's own verify policies apply)
-            if store.is_verified(key):
-                # a previous serve (or a put of a proven artifact) already
-                # recorded the verdict in the index — don't re-prove it on
-                # every warm sweep
-                cached.verified = True
-            else:
-                try:
-                    cached.simulate(iterations=3)
-                    cached.verified = True
-                    store.mark_verified(key)  # persist: nobody re-runs
-                except VERIFY_FAILURES:
-                    store.counters.verify_failures += 1
-                    store.discard(key)
-                    cached = None
+        cached = serve_from_store(store, key, verify=verify)
         if cached is not None:
-            cached.store_hit = True
             return cached
+    if remote is not None:
+        if w is None:
+            print("warning: raw DFG inputs cannot be farmed (the protocol "
+                  "ships workload names); compiling locally", flush=True)
+        else:
+            from repro.compiler.errors import FarmUnavailable
+            from repro.serve_farm.client import remote_compile
+
+            try:
+                return remote_compile(
+                    remote, workload=w.name, unroll=w.unroll,
+                    arch=arch_name, mapper=mapper_name, seed=seed,
+                    budget=budget, iterations=iterations, verify=verify,
+                    deadline_s=deadline_s)
+            except FarmUnavailable as e:
+                print(f"warning: {e}; compiling locally", flush=True)
     t_frontend = time.perf_counter()
 
     def _pnr(name: str, dl_s: Optional[float]):
@@ -382,6 +429,11 @@ def compile(
     t_verify = t_pnr
     if verify:
         if out.mappings:
+            # persist the lowered sim forms alongside the mapping: the
+            # verification below reuses them (no double lowering) and a
+            # later verify-on-load consumer — the serve daemon above all —
+            # skips the lowering + dfg.eval half entirely
+            out.populate_compiled_sim(iterations=3)
             try:
                 out.simulate(iterations=3)
                 out.verified = True

@@ -7,16 +7,30 @@ hands out verified mappings **without re-running place & route**:
 ``compile(..., store=...)`` consults the store first, and
 ``repro.core.collect --store`` runs the whole evaluation grid cache-first.
 
-Layout (all writes atomic: temp file + ``os.replace``)::
+Layout::
 
     <root>/
-      index.json            # digest -> {key, digest, size, ii, cycles, ...}
-      index.json.lock       # flock sidecar for index read-modify-write
+      index.json            # SNAPSHOT: {"schema": ...store-index@2,
+                            #  "epoch", "base_seq", "entries": {digest: row}}
+      journal.jsonl         # append-only mutation log extending the
+                            #  snapshot; per-record checksums; first line
+                            #  is an epoch-stamped header
+      index.json.lock       # flock sidecar serializing appends/compaction
       entries/<keydigest>.json
         {"schema": "repro.compiler/store-entry@1",
          "key":     CompileKey.to_json(),
          "digest":  sha256(canonical artifact JSON),   # integrity digest
          "artifact": CompileResult.to_json()}
+
+Index mutations (put / serve-touch / verify / discard) are **O(1) locked
+appends** to ``journal.jsonl`` — no read-modify-write of an O(entries)
+JSON file on the hot path (the PR 4 design rewrote ``index.json`` whole
+on every serve: fine at 70 entries, hopeless at 100k).  Reads replay
+snapshot + journal; an oversized or stale journal is folded back into the
+snapshot (compaction) under the same lock.  See
+:mod:`repro.compiler.journal` for the record format and the crash-safety
+argument (torn-tail truncation, orphan self-heal, idempotent stale-epoch
+replay).
 
 Durability / correctness properties:
 
@@ -33,10 +47,13 @@ Durability / correctness properties:
   the first time an entry is served (then remembers it in the index);
   ``always`` re-verifies every hit.  A mapping that fails verification is
   quarantined, never served.
-* **Self-healing index** — ``index.json`` is a cache of the entry files,
-  not the source of truth.  If it is missing, unparseable, or disagrees
-  with the directory listing (e.g. a writer died between entry and index
-  update), it is rebuilt by scanning the entries.
+* **Self-healing index** — the snapshot + journal are a cache of the
+  entry files, not the source of truth.  A torn journal tail is truncated
+  on load; rows that disagree with the directory listing are reconciled
+  (ghost rows dropped, orphan entries adopted after an integrity check);
+  an unparseable snapshot is quarantined and the index rebuilt by
+  scanning the entries — which also migrates legacy whole-file
+  ``store-index@1`` files in place.
 * **LRU eviction** — with ``max_bytes`` set, least-recently-served
   entries are evicted on ``put``/``gc`` until the payload fits.  Recency
   is a **monotonic sequence counter** persisted in the index (``seq``,
@@ -60,9 +77,19 @@ from repro.compiler.fsio import (
     quarantine,
     sha256_of_json,
 )
+from repro.compiler.journal import (
+    SNAPSHOT_SCHEMA,
+    LoadedState,
+    StoreJournal,
+    del_record,
+    put_record,
+    touch_record,
+    verify_record,
+)
 
 ENTRY_SCHEMA = "repro.compiler/store-entry@1"
-INDEX_SCHEMA = "repro.compiler/store-index@1"
+#: current index schema — the snapshot half of the snapshot+journal pair
+INDEX_SCHEMA = SNAPSHOT_SCHEMA
 VERIFY_POLICIES = ("never", "first", "always")
 
 
@@ -199,6 +226,7 @@ class ArtifactStore:
         if self.verify not in VERIFY_POLICIES:
             raise ValueError(
                 f"verify policy {self.verify!r} not in {VERIFY_POLICIES}")
+        self._journal = StoreJournal(self.index_path, self.journal_path)
 
     # -- paths -------------------------------------------------------------
     @property
@@ -208,6 +236,10 @@ class ArtifactStore:
     @property
     def index_path(self) -> str:
         return os.path.join(self.root, "index.json")
+
+    @property
+    def journal_path(self) -> str:
+        return os.path.join(self.root, "journal.jsonl")
 
     def entry_path(self, digest: str) -> str:
         return os.path.join(self.entries_dir, digest + ".json")
@@ -224,68 +256,116 @@ class ArtifactStore:
                       if n.endswith(".json") and not n.startswith("."))
 
     def _read_index(self) -> Optional[Dict[str, Dict]]:
-        """The raw index, or ``None`` when missing/unparseable/stale."""
-        import json
+        """Replayed index rows (snapshot + journal), or ``None`` when the
+        persisted state is unusable or trails the entry listing — the
+        callers rebuild/reconcile.  A torn journal tail is healed
+        (truncated) as a side effect, under the index lock."""
+        with locked(self.index_path):
+            state = self._journal.load()
+        if state is None:
+            return None
+        if sorted(state.entries) != self._listed_digests():
+            return None  # stale: writer died between entry and journal append
+        if self._stale_rows(state.entries):
+            return None  # an entry file changed under its row
+        return state.entries
 
-        try:
-            with open(self.index_path) as f:
-                data = json.load(f)
-        except FileNotFoundError:
-            data = None
-        except ValueError:
-            # parse failure = corruption; transient I/O errors propagate
-            # (quarantining an intact index on an EIO blip would only cost
-            # a rebuild, but the same policy on entries destroys data)
-            quarantine(self.index_path)
-            data = None
-        if data is None or data.get("schema") != INDEX_SCHEMA:
-            return None
-        entries = data.get("entries")
-        if not isinstance(entries, dict):
-            return None
-        if sorted(entries) != self._listed_digests():
-            return None  # stale: writer died between entry and index update
+    def _stale_rows(self, entries: Dict[str, Dict]) -> List[str]:
+        """Digests whose entry file's size/mtime disagree with the replayed
+        row — an in-place same-key replacement that never reached the
+        journal.  The row (and in particular its ``verified`` verdict,
+        which belongs to one exact payload) must be rebuilt from the
+        file."""
+        out = []
         for digest, row in entries.items():
-            if not isinstance(row, dict):
-                return None
             try:
                 st = os.stat(self.entry_path(digest))
             except FileNotFoundError:
-                return None
+                out.append(digest)  # ghost row; reconcile drops it
+                continue
             if (row.get("size") != st.st_size
                     or row.get("mtime") != st.st_mtime):
-                # the entry file changed under its row (same-key put that
-                # died before the index update): stale — a rebuild re-reads
-                # it and resets `verified` if the content digest moved
-                return None
-        return entries
+                out.append(digest)
+        return out
 
     def index(self) -> Dict[str, Dict]:
-        """Current index entries, rebuilding from the entry files when the
-        stored index is missing, corrupt, or out of sync with them."""
-        entries = self._read_index()
-        if entries is None:
-            entries = self.rebuild_index()
-        return entries
+        """Current index rows, self-healing: replays snapshot + journal,
+        reconciles drift against the entry listing (ghost rows dropped,
+        orphan files adopted), rebuilds from ``entries/`` when the
+        persisted state is unusable, and compacts an oversized or
+        stale-epoch journal."""
+        with locked(self.index_path):
+            return self._load_or_heal_locked().entries
 
-    def _read_raw_rows(self) -> Dict[str, Dict]:
-        """Best-effort rows from the stored index, staleness ignored —
-        carries hits / last_used / verified bookkeeping across rebuilds."""
-        import json
+    def _load_or_heal_locked(self) -> LoadedState:
+        """Load + self-heal the index; the caller holds the index lock.
+        Always returns a state consistent with the entry listing."""
+        state = self._journal.load()
+        if state is None:
+            entries = self._scan_entries()
+            self._journal.replace(entries)
+            return LoadedState(
+                entries=entries,
+                next_seq=max((int(r.get("seq", 0)) for r in entries.values()),
+                             default=0))
+        listed = self._listed_digests()
+        if sorted(state.entries) != listed:
+            self._reconcile_state(state, listed)
+            state.dirty = True
+        for digest in self._stale_rows(state.entries):
+            # re-read a changed-in-place entry; _index_row resets the
+            # `verified` verdict when the content digest moved
+            path = self.entry_path(digest)
+            old = state.entries.pop(digest)
+            state.dirty = True
+            try:
+                entry = self._load_entry_file(path, digest)
+            except FileNotFoundError:
+                continue
+            except StoreIntegrityError:
+                self.counters.rejected += 1
+                quarantine(path)
+                continue
+            row = self._index_row(entry, path, prev=old)
+            state.entries[digest] = row
+        if state.dirty or self._journal.wants_compaction():
+            self._journal.replace(state.entries, state.next_seq)
+        return state
 
-        try:
-            with open(self.index_path) as f:
-                data = json.load(f)
-        except (FileNotFoundError, ValueError, OSError):
-            return {}
-        entries = data.get("entries") if isinstance(data, dict) else None
-        return entries if isinstance(entries, dict) else {}
+    def _reconcile_state(self, state: LoadedState,
+                         listed: List[str]) -> None:
+        """Make replayed rows agree with the ``entries/`` listing: drop
+        ghost rows whose file vanished; adopt orphan files (a put whose
+        journal record was lost to a crash) after a full integrity
+        check."""
+        listed_set = set(listed)
+        for digest in [d for d in state.entries if d not in listed_set]:
+            del state.entries[digest]
+        for digest in listed:
+            if digest in state.entries:
+                continue
+            path = self.entry_path(digest)
+            try:
+                entry = self._load_entry_file(path, digest)
+            except FileNotFoundError:
+                continue  # raced away between listdir and open
+            except StoreIntegrityError:
+                self.counters.rejected += 1
+                quarantine(path)
+                continue
+            row = self._index_row(entry, path)
+            state.next_seq += 1
+            row["seq"] = state.next_seq
+            state.entries[digest] = row
 
     def _scan_entries(self) -> Dict[str, Dict]:
         """Build index rows by scanning + integrity-checking every entry
         file (quarantining unreadable/tampered ones).  Caller holds the
-        index lock."""
-        prev_rows = self._read_raw_rows()
+        index lock.  Hits / verified / LRU bookkeeping survives via
+        whatever snapshot+journal rows are still readable — including
+        legacy whole-file ``store-index@1`` rows, which is how a PR 4
+        store migrates in place."""
+        prev_rows = self._journal.best_effort_rows()
         entries: Dict[str, Dict] = {}
         for digest in self._listed_digests():
             path = self.entry_path(digest)
@@ -299,49 +379,27 @@ class ArtifactStore:
                                               prev=prev_rows.get(digest))
         return entries
 
-    def _reconcile_rows(self) -> Dict[str, Dict]:
-        """Index rows for the current entry listing, reusing rows the
-        stored index already has and integrity-checking only files it
-        does not know.  This is the hot *write* path (every put makes the
-        index momentarily trail the directory by exactly its own new
-        entry) — a full digest rescan here would make warming a store
-        O(N²) in entry reads.  Full-trust rescans stay where they belong:
-        :meth:`rebuild_index` (read-path self-heal, ``gc``)."""
-        raw = self._read_raw_rows()
-        entries: Dict[str, Dict] = {}
-        for digest in self._listed_digests():
-            path = self.entry_path(digest)
-            row = raw.get(digest)
-            if isinstance(row, dict) and row.get("digest"):
-                try:
-                    st = os.stat(path)
-                except FileNotFoundError:
-                    continue  # raced away; next update drops it anyway
-                if (row.get("size") == st.st_size
-                        and row.get("mtime") == st.st_mtime):
-                    entries[digest] = row
-                    continue
-                # the file changed under the row (e.g. a same-key put that
-                # died before its index update): re-read it; _index_row
-                # resets `verified` when the content digest differs
-            try:
-                entry = self._load_entry_file(path, digest)
-            except StoreIntegrityError:
-                self.counters.rejected += 1
-                quarantine(path)
-                continue
-            entries[digest] = self._index_row(
-                entry, path, prev=row if isinstance(row, dict) else None)
-        return entries
-
     def rebuild_index(self) -> Dict[str, Dict]:
-        """Re-scan ``entries/`` and rewrite ``index.json`` from scratch.
-        Unreadable entry files are quarantined, not trusted; LRU/verified
-        bookkeeping survives via whatever old index rows still match."""
+        """Re-scan ``entries/`` and rewrite the snapshot from scratch
+        (resetting the journal).  Unreadable entry files are quarantined,
+        not trusted; LRU/verified bookkeeping survives via whatever old
+        rows still match."""
         with locked(self.index_path):
             entries = self._scan_entries()
-            self._write_index(entries)
+            self._journal.replace(entries)
         return entries
+
+    def compact(self) -> None:
+        """Fold the journal into the snapshot now.  Happens automatically
+        once the journal outgrows its threshold; the serve daemon's
+        graceful drain also calls it so a restart replays nothing."""
+        with locked(self.index_path):
+            self._compact_locked()
+
+    def _compact_locked(self, label: str = "") -> None:
+        state = self._journal.load()
+        if state is not None:
+            self._journal.replace(state.entries, state.next_seq, label=label)
 
     def _index_row(self, entry: Dict, path: str,
                    prev: Optional[Dict] = None) -> Dict:
@@ -367,28 +425,10 @@ class ArtifactStore:
         }
         return row
 
-    @staticmethod
-    def _next_seq(entries: Dict[str, Dict]) -> int:
-        """Next monotonic access stamp.  Derived from the persisted maximum
-        under the index lock, so it advances across processes and is immune
-        to wall-clock skew (the old ``last_used`` eviction order degraded
-        under NFS/clock-skewed writers)."""
-        return 1 + max((int(r.get("seq", 0)) for r in entries.values()),
-                       default=0)
-
-    def _write_index(self, entries: Dict[str, Dict]):
-        atomic_write_json(self.index_path,
-                          {"schema": INDEX_SCHEMA, "entries": entries})
-
-    def _update_index(self, mutate) -> Dict[str, Dict]:
-        """Locked read-modify-write of the index (rebuilds first if stale)."""
+    def _journal_del(self, digest: str, label: str = "") -> None:
+        """Locked O(1) append of a deletion record (quarantine/discard)."""
         with locked(self.index_path):
-            entries = self._read_index()
-            if entries is None:
-                entries = self._reconcile_rows()  # already under the lock
-            mutate(entries)
-            self._write_index(entries)
-        return entries
+            self._journal.append([del_record(digest)], label=label)
 
     # -- entries -----------------------------------------------------------
     def _load_entry_file(self, path: str, digest: str) -> Dict:
@@ -429,9 +469,10 @@ class ArtifactStore:
 
     def put(self, result: CompileResult,
             key: Optional[CompileKey] = None) -> str:
-        """Insert an artifact; returns its key digest.  Atomic, lock-held
-        index update, then LRU eviction if the store exceeds ``max_bytes``
-        (the just-inserted entry is never evicted)."""
+        """Insert an artifact; returns its key digest.  Atomic entry
+        write, then an O(1) locked journal append; LRU eviction follows if
+        the store exceeds ``max_bytes`` (the just-inserted entry is never
+        evicted)."""
         import json
 
         key = key or key_for(result)
@@ -459,25 +500,36 @@ class ArtifactStore:
         # disk; the integrity digest must catch it on the next get()
         faultinject.maybe_corrupt(path, "store.put", key.describe())
 
-        def mutate(entries):
-            try:
-                row = self._index_row(entry, path, prev=entries.get(digest))
-            except FileNotFoundError:
-                # the just-committed file vanished before its index row was
-                # stamped: a concurrent reconcile/rebuild quarantined a torn
-                # write, or a gc raced us.  Don't index a ghost entry — the
-                # put degrades to a no-op and the next get() is a miss.
-                entries.pop(digest, None)
-                return
+        try:
+            row = self._index_row(entry, path)
+        except FileNotFoundError:
+            # the just-committed file vanished before its journal record
+            # was appended: a concurrent reconcile/rebuild quarantined a
+            # torn write, or a gc raced us.  Don't journal a ghost row —
+            # the put degrades to a no-op and the next get() is a miss.
+            row = None
+        if row is not None:
             if result.verified is True:
                 # the producer already proved this mapping against the
                 # oracle; 'first' consumers need not re-run the simulator
                 row["verified"] = True
-            row["seq"] = self._next_seq(entries)
-            entries[digest] = row
-            self._evict_over_cap(entries, protect=digest)
-
-        self._update_index(mutate)
+            # hits/created/verified bookkeeping of a same-key re-put merges
+            # at replay time (journal._apply), so the append never needs to
+            # read the current index — that is what keeps it O(1)
+            with locked(self.index_path):
+                self._journal.append([put_record(digest, row)],
+                                     label=key.describe())
+                if self.max_bytes is not None:
+                    state = self._load_or_heal_locked()
+                    before = set(state.entries)
+                    self._evict_over_cap(state.entries, protect=digest)
+                    victims = sorted(before - set(state.entries))
+                    if victims:
+                        self._journal.append(
+                            [del_record(d) for d in victims],
+                            label=key.describe())
+                elif self._journal.wants_compaction():
+                    self._compact_locked(label=key.describe())
         self.counters.puts += 1
         return digest
 
@@ -498,7 +550,7 @@ class ArtifactStore:
             self.counters.rejected += 1
             self.counters.misses += 1
             quarantine(path)
-            self._update_index(lambda entries: entries.pop(digest, None))
+            self._journal_del(digest, key.describe())
             return None
         except OSError as e:
             # transient I/O failure (EIO, EACCES): typed, never quarantines
@@ -519,19 +571,22 @@ class ArtifactStore:
                 self.counters.verify_failures += 1
                 self.counters.misses += 1
                 quarantine(path, reason="unverified")
-                self._update_index(lambda entries: entries.pop(digest, None))
+                self._journal_del(digest, key.describe())
                 return None
 
-        def touch(entries):
-            row = entries.get(digest)
-            if row is not None:
-                row["last_used"] = time.time()  # display only
-                row["seq"] = self._next_seq(entries)  # LRU order
-                row["hits"] = int(row.get("hits", 0)) + 1
-                if verified_now:
-                    row["verified"] = True
-
-        self._update_index(touch)
+        # the touch record carries a fallback row so an *orphan* entry
+        # (its put record lost to a crash between the entry write and the
+        # journal append) self-heals into the index on its first hit
+        try:
+            fallback = self._index_row(entry, path)
+        except FileNotFoundError:
+            fallback = None
+        with locked(self.index_path):
+            self._journal.append(
+                [touch_record(digest, time.time(), verified_now, fallback)],
+                label=key.describe())
+            if self._journal.wants_compaction():
+                self._compact_locked(label=key.describe())
         self.counters.hits += 1
         return result
 
@@ -545,14 +600,9 @@ class ArtifactStore:
         """Persist an externally-obtained verification verdict (e.g. the
         pipeline's hit-path re-simulation) so ``verify="first"`` consumers
         skip the simulator for this entry."""
-        digest = key.digest
-
-        def mut(entries):
-            row = entries.get(digest)
-            if row is not None:
-                row["verified"] = True
-
-        self._update_index(mut)
+        with locked(self.index_path):
+            self._journal.append([verify_record(key.digest)],
+                                 label=key.describe())
 
     def discard(self, key: CompileKey, reason: str = "unverified") -> None:
         """Quarantine an entry and drop it from the index — used when a
@@ -560,7 +610,7 @@ class ArtifactStore:
         wrong; the next lookup misses and recompiles."""
         digest = key.digest
         quarantine(self.entry_path(digest), reason=reason)
-        self._update_index(lambda entries: entries.pop(digest, None))
+        self._journal_del(digest, key.describe())
 
     def iter_artifacts(self):
         """Yield ``(CompileKey, CompileResult)`` for every intact entry,
@@ -629,9 +679,10 @@ class ArtifactStore:
         their next ``get``.  Returns the number of entries evicted."""
         self.rebuild_index()  # full digest scan; quarantines corrupt entries
         before = self.counters.evictions
-        self._update_index(
-            lambda entries: self._evict_over_cap(entries,
-                                                 max_bytes=max_bytes))
+        with locked(self.index_path):
+            state = self._load_or_heal_locked()
+            self._evict_over_cap(state.entries, max_bytes=max_bytes)
+            self._journal.replace(state.entries, state.next_seq)
         return self.counters.evictions - before
 
 

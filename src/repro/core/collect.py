@@ -25,7 +25,15 @@ the cache is rewritten atomically after each workload completes.
 Wall-clock per run is appended to ``BENCH_mapper.json`` (the mapper-speed
 trajectory surfaced by ``benchmarks/run.py``'s ``bench_mapper_speed``
 row) under a bounded lock: a dead lock-holder strands the entry into a
-``*.stranded-*`` sidecar instead of hanging a finished run.
+``*.stranded-*`` sidecar instead of hanging a finished run, and the next
+successful locked append merges any sidecars back into the trajectory.
+
+``--remote <socket>`` offloads cache misses to a ``plaid-compile serve``
+farm daemon (:mod:`repro.serve_farm`): cells are served from the shared
+store when warm, compiled farm-side when cold, and fall back to local
+compiles when the farm is unreachable — the sweep completes either way.
+Farm throughput (served cells/sec, daemon counters) rides in the bench
+entry under ``farm``.
 """
 from __future__ import annotations
 
@@ -154,6 +162,7 @@ def run_job(task: Tuple[str, int, str, Optional[str]]):
     """
     wname, unroll, job = task[0], task[1], task[2]
     store_path = task[3] if len(task) > 3 else None
+    remote = task[4] if len(task) > 4 else None
     _ensure_registrations()
     faultinject.check("worker", f"{_cell_key(wname, unroll)}/{job}")
     store = None
@@ -174,14 +183,14 @@ def run_job(task: Tuple[str, int, str, Optional[str]]):
     elif job in _spatial_jobs():
         arch_name, mapper_name = job_grid()[job]
         res = compile_workload(w, arch=arch_name, mapper=mapper_name, seed=0,
-                               store=store)
+                               store=store, remote=remote)
         out["spatial"] = res.spatial
         out["cycles"] = res.cycles
     else:
         arch_name, mapper_name = mapper_jobs()[job]
         res = compile_workload(
             w, arch=arch_name, mapper=mapper_name, seed=0,
-            verify=job in VERIFY_JOBS, store=store,
+            verify=job in VERIFY_JOBS, store=store, remote=remote,
         )
         out["ii"] = res.ii
         out["cycles"] = res.cycles
@@ -189,7 +198,7 @@ def run_job(task: Tuple[str, int, str, Optional[str]]):
             out["route_cache"] = res.route_cache
         if job in VERIFY_JOBS:
             out["verified"] = bool(res.verified)
-    if store is not None and job != "motifs":
+    if (store is not None or remote is not None) and job != "motifs":
         out["store_hit"] = bool(res.store_hit)
     out["wall_s"] = time.time() - t0
     return _cell_key(w.name, w.unroll), job, out
@@ -269,15 +278,29 @@ def _append_bench(bench_path: str, entry: Dict,
     The lock wait is **bounded**: a lock-holder that died (or hung) mid-
     append must not strand a finished run forever.  On timeout the entry
     is written to a ``<bench>.stranded-<pid>-<ts>.json`` sidecar with a
-    warning — recoverable data beats an indefinite hang.
+    warning — recoverable data beats an indefinite hang.  The next
+    successful locked append **reclaims** any sidecars: their runs merge
+    back into the trajectory (exact-duplicate entries are skipped, so a
+    crash between merge and unlink cannot double-count) and the sidecar
+    files are removed.
     """
     try:
         with locked(bench_path, timeout_s=lock_timeout_s):
             data = load_json_or_quarantine(bench_path, {"runs": []})
             if not isinstance(data, dict):
                 data = {"runs": []}
-            data.setdefault("runs", []).append(entry)
+            runs = data.setdefault("runs", [])
+            reclaimed = _reclaim_stranded(bench_path, runs)
+            runs.append(entry)
             atomic_write_json(bench_path, data, indent=1)
+            for sidecar in reclaimed:
+                try:
+                    os.unlink(sidecar)
+                except OSError:
+                    pass
+            if reclaimed:
+                print(f"bench: reclaimed {len(reclaimed)} stranded "
+                      f"sidecar(s) into {bench_path}", flush=True)
     except LockTimeout:
         sidecar = f"{bench_path}.stranded-{os.getpid()}-{int(time.time())}.json"
         atomic_write_json(sidecar, {"runs": [entry]}, indent=1)
@@ -286,6 +309,31 @@ def _append_bench(bench_path: str, entry: Dict,
             f"{lock_timeout_s}s (dead lock-holder?); entry preserved in "
             f"{sidecar}", flush=True,
         )
+
+
+def _reclaim_stranded(bench_path: str, runs: List[Dict]) -> List[str]:
+    """Merge ``<bench>.stranded-*.json`` sidecars (orphaned by an earlier
+    bench-lock timeout) into ``runs``; returns the sidecar paths to
+    unlink once the merged trajectory is safely written.  Unreadable
+    sidecars are left in place for inspection."""
+    import glob
+
+    reclaimed: List[str] = []
+    for sidecar in sorted(glob.glob(glob.escape(bench_path)
+                                    + ".stranded-*.json")):
+        try:
+            with open(sidecar) as f:
+                side = json.load(f)
+        except (OSError, ValueError):
+            continue
+        side_runs = side.get("runs") if isinstance(side, dict) else None
+        if not isinstance(side_runs, list):
+            continue
+        for run in side_runs:
+            if run not in runs:
+                runs.append(run)
+        reclaimed.append(sidecar)
+    return reclaimed
 
 
 def _batch_verify_store(store_path: str, iterations: int = 3) -> Dict:
@@ -340,7 +388,8 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
             retries: int = 1,
             start_method: Optional[str] = None,
             plugins: Optional[List[str]] = None,
-            batch_verify: bool = False):
+            batch_verify: bool = False,
+            remote: Optional[str] = None):
     """Run the (workload × job) grid; see module docstring.
 
     ``store_path`` routes every compile through the artifact store at that
@@ -351,7 +400,8 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
     store-roundtrip check.  ``batch_verify`` re-verifies every stored
     mapping after the sweep through one ``repro.sim.simulate_batch``
     call (requires ``store_path``); its stats land in the bench entry
-    under ``sim_verify``.
+    under ``sim_verify``.  ``remote`` (a farm daemon's socket path)
+    offloads cache misses to the farm — see the module docstring.
 
     Supervision knobs: ``cell_timeout_s`` is the hard wall-clock limit per
     cell (``None`` = unlimited), ``retries`` bounds re-attempts of crashed
@@ -401,7 +451,7 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
         if parts:
             seed_parts[key] = parts
     tasks = [
-        (w.name, w.unroll, j, store_path)
+        (w.name, w.unroll, j, store_path, remote)
         for w in pending for j in pending_jobs[_cell_key(w.name, w.unroll)]
     ]
     by_key = {_cell_key(w.name, w.unroll): w for w in pending}
@@ -484,18 +534,44 @@ def collect(out_path: str, quick: bool = False, jobs: int = 0,
             entry["failed_cells"] = n_failures
         if hits or misses:
             entry["route_cache_hit_rate"] = round(hits / (hits + misses), 4)
-        if store_path is not None:
+        if store_path is not None or remote is not None:
+            # remote-only sweeps hit the FARM's store; the hit/miss split
+            # still lands here so the warm-pass gate can assert on it
             st_hits = sum(c.get("store", {}).get("hits", 0) for c in cells)
             st_miss = sum(c.get("store", {}).get("misses", 0) for c in cells)
             entry["store"] = {
-                "path": store_path,
                 "hits": st_hits,
                 "misses": st_miss,
                 "hit_rate": (round(st_hits / (st_hits + st_miss), 4)
                              if st_hits + st_miss else None),
             }
-            print(f"store: {st_hits} hit(s), {st_miss} miss(es) "
-                  f"({store_path})", flush=True)
+            if store_path is not None:
+                entry["store"]["path"] = store_path
+                print(f"store: {st_hits} hit(s), {st_miss} miss(es) "
+                      f"({store_path})", flush=True)
+        if remote is not None:
+            served = sum(
+                (c.get("store", {}).get("hits", 0)
+                 + c.get("store", {}).get("misses", 0)) for c in cells)
+            wall = max(time.time() - t_start, 1e-9)
+            farm: Dict[str, object] = {
+                "addr": remote,
+                "served": served,
+                "served_per_s": round(served / wall, 2),
+            }
+            try:
+                from repro.serve_farm.client import farm_status
+
+                status = farm_status(remote)
+                farm["daemon"] = {
+                    "uptime_s": status.get("uptime_s"),
+                    "counters": status.get("counters"),
+                }
+            except (ConnectionError, OSError):
+                pass  # farm gone by bench time; local stats still recorded
+            entry["farm"] = farm
+            print(f"farm: {served} cell(s) via {remote} "
+                  f"({farm['served_per_s']}/s)", flush=True)
         if batch_verify and store_path is not None:
             entry["sim_verify"] = _batch_verify_store(store_path)
         if bench_note:
@@ -538,6 +614,10 @@ if __name__ == "__main__":
     ap.add_argument("--plugins", default=None,
                     help="comma-separated modules each worker imports first "
                          "(registers plug-in mappers/arches under spawn)")
+    ap.add_argument("--remote", default=None, metavar="SOCKET",
+                    help="plaid-compile serve socket: offload cache misses "
+                         "to the farm daemon (falls back to local compiles "
+                         "when unreachable)")
     ap.add_argument("--batch-verify", action="store_true",
                     help="after the sweep, re-verify every stored mapping "
                          "through one batched simulate_batch call "
@@ -553,7 +633,7 @@ if __name__ == "__main__":
         cell_timeout_s=args.cell_timeout, retries=args.retries,
         start_method=args.start_method,
         plugins=(args.plugins.split(",") if args.plugins else None),
-        batch_verify=args.batch_verify,
+        batch_verify=args.batch_verify, remote=args.remote,
     )
     if args.strict and any(
             isinstance(r, dict) and r.get("failures") for r in res.values()):

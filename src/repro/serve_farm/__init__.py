@@ -1,0 +1,19 @@
+"""The compile farm: a long-lived ``plaid-compile serve`` daemon over a
+Unix-domain socket, plus the retrying remote client behind
+``compile(..., remote=)`` and ``collect --remote``.
+
+Layering (see ``docs/serving_farm.md``):
+
+* :mod:`repro.serve_farm.protocol` — length-prefixed JSON frames;
+* :mod:`repro.serve_farm.daemon` — :class:`CompileFarm`: cache-first
+  lookup, in-flight dedup of identical ``CompileKey``s, a bounded job
+  queue with explicit load-shedding, supervised worker processes, and
+  graceful drain on SIGTERM;
+* :mod:`repro.serve_farm.client` — bounded deterministic retry with
+  exponential backoff + jitter, idempotent resubmission, and a
+  circuit breaker that degrades to local compiles.
+"""
+from repro.serve_farm.client import farm_request, farm_status, remote_compile
+from repro.serve_farm.daemon import CompileFarm
+
+__all__ = ["CompileFarm", "farm_request", "farm_status", "remote_compile"]

@@ -315,15 +315,17 @@ def simulate_batch(mappings, iterations: int = 4, backend: str = "auto",
     return out
 
 
-def verify_mappings(mappings, iterations: int = 3,
-                    backend: str = "auto") -> List[Dict[Tuple[int, int], float]]:
+def verify_mappings(mappings, iterations: int = 3, backend: str = "auto",
+                    prepared: Optional[PreparedBatch] = None,
+                    ) -> List[Dict[Tuple[int, int], float]]:
     """Drop-in batched replacement for the per-mapping scalar verify loop
     in ``CompileResult.simulate``: returns the per-mapping value dicts,
     raising ``AssertionError`` on the first failing mapping (the same
     disproof contract — and the same ``VERIFY_FAILURES`` membership — as
-    the scalar oracle)."""
+    the scalar oracle).  ``prepared`` (e.g. rebuilt from an artifact's
+    stored ``compiled_sim`` forms) skips the lowering half."""
     verdicts = simulate_batch(mappings, iterations=iterations,
-                              backend=backend)
+                              backend=backend, prepared=prepared)
     for i, v in enumerate(verdicts):
         assert v.ok, (
             f"mapping[{i}] failed batched verification "

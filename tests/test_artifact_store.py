@@ -813,13 +813,14 @@ def test_lru_seq_immune_to_clock_skew(tmp_path, monkeypatch):
 
 
 def test_lru_seq_persists_across_processes_and_reconciles(tmp_path):
-    """seq is persisted in the index and advances across store instances
-    (read-modify-write under the index lock); the hot-path incremental
-    reconcile keeps existing stamps."""
+    """seq is persisted (derived from journal replay order under the index
+    lock) and advances across store instances; compaction folds the stamps
+    into the snapshot unchanged."""
     a = ArtifactStore(str(tmp_path))
     k0 = key_for(_unmapped(seed=0))
     a.put(_unmapped(seed=0))
     a.put(_unmapped(seed=1))
+    a.compact()  # fold the journal so the snapshot carries the rows
     with open(a.index_path) as f:
         rows = json.load(f)["entries"]
     seqs = sorted(int(r["seq"]) for r in rows.values())
@@ -827,7 +828,8 @@ def test_lru_seq_persists_across_processes_and_reconciles(tmp_path):
 
     b = ArtifactStore(str(tmp_path))  # fresh instance, same on-disk index
     b.get(k0)
-    b.put(_unmapped(seed=2))  # reconcile path: index trails by one entry
+    b.put(_unmapped(seed=2))  # journal append on top of the snapshot
+    b.compact()
     with open(b.index_path) as f:
         rows = json.load(f)["entries"]
     assert int(rows[k0.digest]["seq"]) == 3  # the get stamped it
@@ -844,8 +846,9 @@ def test_lru_rows_without_seq_evict_first(tmp_path):
     old_key = key_for(_unmapped(seed=0))
     store.put(_unmapped(seed=0))
     store.put(_unmapped(seed=1))
+    store.compact()  # rows now live in the snapshot
 
-    # simulate a pre-seq index row for seed=0
+    # simulate a pre-seq snapshot row for seed=0
     with open(store.index_path) as f:
         data = json.load(f)
     del data["entries"][old_key.digest]["seq"]

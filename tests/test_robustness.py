@@ -339,10 +339,10 @@ def test_fallback_on_infeasibility():
     assert (res.ii, res.cycles) == (direct.ii, direct.cycles)
 
 
-def test_degraded_artifact_roundtrips_schema_v4(tmp_path):
+def test_degraded_artifact_roundtrips_schema_v5(tmp_path):
     from repro.compiler.artifact import ARTIFACT_SCHEMA, CompileResult
 
-    assert ARTIFACT_SCHEMA == "repro.compiler/artifact@4"
+    assert ARTIFACT_SCHEMA == "repro.compiler/artifact@5"
     res = compile_workload("jacobi", unroll=4, deadline_s=0.05,
                            fallback_mapper="node_greedy")
     path = str(tmp_path / "degraded.json")
@@ -453,9 +453,13 @@ def test_append_bench_strands_entry_on_dead_lock_holder(tmp_path):
         with open(sidecars[0]) as f:
             assert json.load(f)["runs"] == [{"note": "stranded run"}]
         assert not os.path.exists(bench)
+    # the next successful locked append reclaims the sidecar: its runs
+    # merge back into the trajectory and the sidecar file is removed
     _append_bench(bench, {"note": "healthy"}, lock_timeout_s=5.0)
     with open(bench) as f:
-        assert json.load(f)["runs"] == [{"note": "healthy"}]
+        assert json.load(f)["runs"] == [{"note": "stranded run"},
+                                        {"note": "healthy"}]
+    assert glob.glob(bench + ".stranded-*.json") == []
 
 
 # -- collect chaos: torn grids heal -------------------------------------------

@@ -1,0 +1,369 @@
+"""The crash-safe compile farm: wire protocol, daemon semantics, client.
+
+Covers the contracts the chaos gate in ``scripts/ci.sh`` leans on:
+
+* length-prefixed frames reject garbage *before* buffering it, and a
+  peer dying mid-frame surfaces as ``ConnectionError`` (retryable);
+* the daemon is cache-first, dedups in-flight work by ``CompileKey``,
+  sheds load with a typed ``ServiceOverloaded`` instead of queueing
+  unboundedly, and refuses new compiles while draining;
+* served artifacts are bit-identical to local compiles, cold and warm;
+* the client retries with deterministic jitter, trips its circuit
+  breaker on a dead socket, and raises ``FarmUnavailable`` fast once
+  the breaker is open;
+* a daemon restarted over a stale socket (unclean stop, no compaction)
+  heals the store journal and serves the previous daemon's artifacts
+  warm.
+
+Plus the two PR-8 satellites that ride along: stranded bench sidecars
+merge back on the next locked append, and ``compiled_sim`` lowered
+forms round-trip with their verify-on-load binding digest.
+"""
+import json
+import os
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.compiler import compile
+from repro.compiler.errors import FarmUnavailable, ServiceOverloaded
+from repro.compiler.pipeline import compile_key
+from repro.serve_farm.client import (
+    _jitter,
+    farm_ping,
+    farm_request,
+    farm_status,
+    remote_compile,
+    reset_breakers,
+)
+from repro.serve_farm.daemon import _STOP, CompileFarm, _Job
+from repro.serve_farm.protocol import (
+    MAX_FRAME,
+    ProtocolError,
+    recv_msg,
+    send_msg,
+)
+
+# -- wire protocol -----------------------------------------------------------
+
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(5.0)
+    b.settimeout(5.0)
+    return a, b
+
+
+def test_protocol_round_trip():
+    a, b = _pair()
+    with a, b:
+        msg = {"op": "compile", "workload": "atax", "unroll": 2,
+               "budget": None, "nested": {"x": [1, 2.5, "s"]}}
+        send_msg(a, msg)
+        assert recv_msg(b) == msg
+        # full duplex: frames flow the other way on the same pair
+        send_msg(b, {"ok": True})
+        assert recv_msg(a) == {"ok": True}
+
+
+def test_protocol_peer_closed_mid_frame():
+    a, b = _pair()
+    with b:
+        # announce 100 bytes, send 3, die
+        import struct
+        a.sendall(struct.pack(">I", 100) + b"abc")
+        a.close()
+        with pytest.raises(ConnectionError):
+            recv_msg(b)
+
+
+def test_protocol_rejects_oversized_frame_before_buffering():
+    a, b = _pair()
+    with a, b:
+        import struct
+        a.sendall(struct.pack(">I", MAX_FRAME + 1))
+        with pytest.raises(ProtocolError):
+            recv_msg(b)
+
+
+@pytest.mark.parametrize("payload", [b"not json at all", b"[1,2,3]"])
+def test_protocol_rejects_non_object_payload(payload):
+    a, b = _pair()
+    with a, b:
+        import struct
+        a.sendall(struct.pack(">I", len(payload)) + payload)
+        with pytest.raises(ProtocolError):
+            recv_msg(b)
+
+
+# -- daemon ------------------------------------------------------------------
+
+
+@pytest.fixture
+def farm(tmp_path):
+    reset_breakers()
+    sock = str(tmp_path / "farm.sock")
+    f = CompileFarm(str(tmp_path / "store"), sock, workers=2,
+                    queue_limit=4, default_deadline_s=120.0, retries=0)
+    f.start()
+    yield f, sock
+    f.shutdown()
+    reset_breakers()
+
+
+def test_ping_and_status(farm):
+    f, sock = farm
+    assert farm_ping(sock) is True
+    st = farm_status(sock)
+    assert st["ok"] and st["pid"] == os.getpid()
+    assert st["workers"] == 2 and st["queue_limit"] == 4
+    assert st["draining"] is False
+    assert st["counters"]["shed"] == 0
+
+
+def test_unknown_op_is_a_protocol_error(farm):
+    _, sock = farm
+    resp = farm_request(sock, {"op": "frobnicate"}, retries=0)
+    assert resp["ok"] is False and resp["error"] == "ProtocolError"
+
+
+def test_compile_without_workload_is_rejected(farm):
+    _, sock = farm
+    resp = farm_request(sock, {"op": "compile"}, retries=0)
+    assert resp["ok"] is False and resp["error"] == "ProtocolError"
+
+
+def test_remote_cold_then_warm_bit_identical_to_local(farm):
+    f, sock = farm
+    local = compile("atax", unroll=2, arch="plaid2x2",
+                    mapper="hierarchical", seed=0)
+    cold = remote_compile(sock, workload="atax", unroll=2, retries=0)
+    assert cold.store_hit is False
+    warm = remote_compile(sock, workload="atax", unroll=2, retries=0)
+    assert warm.store_hit is True
+    # served artifacts are bit-identical to a local compile, cold and warm
+    assert cold.ii == warm.ii == local.ii
+    assert cold.mappings == warm.mappings == local.mappings
+    assert f.counters["compiles"] == 1
+    assert f.counters["hits"] == 1
+
+
+def test_inflight_dedup_attaches_instead_of_recompiling(farm):
+    f, sock = farm
+    key = compile_key("atax", unroll=2)
+    # park a fake in-flight job for that key (never enqueued, so no
+    # worker can complete it behind the test's back)
+    job = _Job(digest=key.digest, task=(), label="t", deadline_s=60.0,
+               retries=0)
+    with f._lock:
+        f._jobs[key.digest] = job
+    sentinel = {"ok": True, "hit": False, "artifact": {"fake": 1}}
+    results = []
+    t = threading.Thread(target=lambda: results.append(farm_request(
+        sock, {"op": "compile", "workload": "atax", "unroll": 2},
+        retries=0, timeout_s=60.0)))
+    t.start()
+    deadline = time.monotonic() + 10.0
+    while f.counters["dedup_attached"] == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert f.counters["dedup_attached"] == 1
+    assert job.waiters == 2
+    with f._lock:
+        f._jobs.pop(key.digest, None)
+        job.response = sentinel
+        job.done.set()
+    t.join(timeout=10.0)
+    assert results and results[0]["artifact"] == {"fake": 1}
+    assert f.counters["compiles"] == 0  # nothing was compiled twice (or once)
+
+
+def test_overload_sheds_with_typed_error(farm):
+    f, sock = farm
+    with f._lock:
+        for i in range(f.queue_limit):
+            f._jobs[f"fake-{i}"] = _Job(digest=f"fake-{i}", task=(),
+                                        label="t", deadline_s=1.0, retries=0)
+    try:
+        with pytest.raises(ServiceOverloaded) as ei:
+            farm_request(sock, {"op": "compile", "workload": "atax",
+                                "unroll": 2}, retries=1, backoff_s=0.01)
+        assert ei.value.queue_depth == f.queue_limit
+        assert ei.value.queue_limit == f.queue_limit
+        assert ei.value.exit_code == 17
+        # the shed was retried once, then surfaced: both attempts counted
+        assert f.counters["shed"] == 2
+    finally:
+        with f._lock:
+            f._jobs.clear()
+
+
+def test_draining_daemon_refuses_new_compiles(farm):
+    f, _ = farm
+    f._draining.set()
+    resp = f._handle_compile({"op": "compile", "workload": "atax",
+                              "unroll": 2})
+    assert resp["ok"] is False and resp["error"] == "FarmUnavailable"
+    f._draining.clear()
+
+
+def test_restart_over_stale_socket_serves_previous_artifacts_warm(tmp_path):
+    reset_breakers()
+    store = str(tmp_path / "store")
+    sock = str(tmp_path / "farm.sock")
+    f1 = CompileFarm(store, sock, workers=1, default_deadline_s=120.0,
+                     retries=0)
+    f1.start()
+    try:
+        cold = remote_compile(sock, workload="atax", unroll=2, retries=0)
+    finally:
+        # unclean stop: listener closed, workers stopped, but NO drain —
+        # no journal compaction, and the socket file is left behind
+        f1._draining.set()
+        f1._listener.close()
+        for _ in range(f1.workers):
+            f1._queue.put(_STOP)
+    assert os.path.exists(sock)  # the stale socket a kill -9 leaves
+
+    f2 = CompileFarm(store, sock, workers=1, default_deadline_s=120.0,
+                     retries=0)
+    f2.start()
+    try:
+        warm = remote_compile(sock, workload="atax", unroll=2,
+                              retries=2, backoff_s=0.05)
+        assert warm.store_hit is True
+        assert warm.mappings == cold.mappings
+        assert f2.counters["hits"] == 1 and f2.counters["compiles"] == 0
+    finally:
+        f2.shutdown()
+        reset_breakers()
+
+
+# -- client retry / circuit breaker ------------------------------------------
+
+
+def test_jitter_is_deterministic_and_bounded():
+    vals = {_jitter("/tmp/a.sock", k, "atax/u2") for k in range(8)}
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert len(vals) > 1  # attempts actually spread
+    assert _jitter("/tmp/a.sock", 3, "s") == _jitter("/tmp/a.sock", 3, "s")
+
+
+def test_dead_socket_raises_farm_unavailable_and_opens_breaker(tmp_path):
+    reset_breakers()
+    addr = str(tmp_path / "nobody.sock")
+    with pytest.raises(FarmUnavailable) as ei:
+        farm_request(addr, {"op": "ping"}, retries=4, backoff_s=0.001)
+    assert ei.value.exit_code == 18
+    # breaker is now open: the next call fails immediately, no sleeping
+    # through four backoffs of 0.5s each
+    t0 = time.monotonic()
+    with pytest.raises(FarmUnavailable) as ei:
+        farm_request(addr, {"op": "ping"}, retries=4, backoff_s=0.5)
+    assert time.monotonic() - t0 < 0.2
+    assert "breaker" in str(ei.value)
+    reset_breakers()
+
+
+def test_farm_ping_false_on_dead_socket(tmp_path):
+    assert farm_ping(str(tmp_path / "nobody.sock")) is False
+
+
+def test_compile_remote_degrades_to_local_when_farm_is_down(tmp_path):
+    reset_breakers()
+    out = compile("atax", unroll=2, store=str(tmp_path / "store"),
+                  remote=str(tmp_path / "nobody.sock"))
+    assert out.ii is not None and out.mappings  # local fallback compiled
+    reset_breakers()
+
+
+# -- satellite: stranded bench sidecar reclaim -------------------------------
+
+
+def test_stranded_sidecar_merges_on_next_locked_append(tmp_path):
+    from repro.core.collect import _append_bench
+
+    bench = str(tmp_path / "BENCH.json")
+    _append_bench(bench, {"run": 1})
+    sidecar = bench + ".stranded-999-1.json"
+    with open(sidecar, "w") as f:
+        json.dump({"runs": [{"run": "stranded"}, {"run": 1}]}, f)
+    _append_bench(bench, {"run": 2})
+    with open(bench) as f:
+        runs = json.load(f)["runs"]
+    # merged once, exact duplicates skipped, sidecar gone
+    assert runs == [{"run": 1}, {"run": "stranded"}, {"run": 2}]
+    assert not os.path.exists(sidecar)
+
+
+def test_bench_lock_timeout_strands_then_reclaims(tmp_path):
+    from repro.compiler.fsio import locked
+    from repro.core.collect import _append_bench
+
+    bench = str(tmp_path / "BENCH.json")
+    _append_bench(bench, {"run": 1})
+    with locked(bench):  # a dead/hung lock-holder
+        _append_bench(bench, {"run": 2}, lock_timeout_s=0.2)
+    sidecars = [p for p in os.listdir(str(tmp_path))
+                if ".stranded-" in p]
+    assert len(sidecars) == 1  # entry preserved, not lost
+    with open(bench) as f:
+        assert json.load(f)["runs"] == [{"run": 1}]
+    _append_bench(bench, {"run": 3})  # lock is free again: reclaim
+    with open(bench) as f:
+        assert json.load(f)["runs"] == [{"run": 1}, {"run": 2}, {"run": 3}]
+    assert not any(".stranded-" in p for p in os.listdir(str(tmp_path)))
+
+
+# -- satellite: compiled_sim lowered forms -----------------------------------
+
+
+def test_compiled_sim_round_trips_and_binds_to_mappings(tmp_path):
+    res = compile("atax", unroll=2)
+    assert res.populate_compiled_sim(iterations=3) is True
+    cs = res.compiled_sim
+    assert cs["iterations"] == 3
+    assert len(cs["forms"]) == len(res.mappings)
+
+    path = res.save(str(tmp_path / "a.json"))
+    loaded = res.load(path)
+    assert loaded.compiled_sim == cs
+    # the stored forms rebuild into a usable PreparedBatch...
+    assert loaded._stored_prepared(3) is not None
+    # ...and simulate() through them matches a fresh lowering exactly
+    fresh = compile("atax", unroll=2)
+    assert loaded.simulate(iterations=3) == fresh.simulate(iterations=3)
+
+    # wrong trip count -> lower freshly
+    assert loaded._stored_prepared(5) is None
+
+
+def test_compiled_sim_rejects_stale_binding(tmp_path):
+    res = compile("atax", unroll=2)
+    assert res.populate_compiled_sim(iterations=3)
+    path = res.save(str(tmp_path / "a.json"))
+    with open(path) as f:
+        data = json.load(f)
+    # tamper with the mappings AFTER the forms were lowered: the digest
+    # binding must refuse the stale forms (simulate() then re-lowers and
+    # the tampered schedule is caught by validation, but _stored_prepared
+    # itself must already say no)
+    node = next(iter(data["mappings"][0]["time"]))
+    data["mappings"][0]["time"][node] += 1
+    with open(path, "w") as f:
+        json.dump(data, f)
+    loaded = res.load(path)
+    assert loaded._stored_prepared(3) is None
+
+
+def test_legacy_artifact_schema_4_loads_without_compiled_sim(tmp_path):
+    res = compile("atax", unroll=2)
+    data = res.to_json()
+    data["schema"] = "repro.compiler/artifact@4"
+    data.pop("compiled_sim", None)
+    from repro.compiler.artifact import CompileResult
+    legacy = CompileResult.from_json(data)
+    assert legacy.compiled_sim is None
+    assert legacy._stored_prepared(3) is None  # no forms -> lower freshly
+    assert legacy.simulate(iterations=3) == res.simulate(iterations=3)

@@ -1,0 +1,301 @@
+"""The journaled store index: O(1) appends, compaction, crash recovery.
+
+Pins the PR 8 index contract:
+
+* mutations are journal *appends* — the snapshot is not rewritten on the
+  put/serve hot path (that was the PR 4 whole-file design);
+* compaction folds the journal into the snapshot and resets it, and the
+  two survive a crash at every write point in between;
+* ``kill -9`` at each injected crash site (``store.put``,
+  ``store.journal``, ``store.compact``) recovers to an index consistent
+  with ``entries/`` — committed artifacts are never lost, orphans are
+  adopted, torn journal tails are truncated;
+* N concurrent writer processes + a reader, with crashes interleaved,
+  end with every acknowledged append served (the satellite stress gate);
+* a legacy whole-file ``store-index@1`` migrates in place, keeping its
+  hits/verified bookkeeping.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.compiler import ArtifactStore, CompileResult
+from repro.compiler.journal import JOURNAL_SCHEMA, SNAPSHOT_SCHEMA
+from repro.compiler.store import key_for
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _unmapped(seed=0, name="atax", unroll=2) -> CompileResult:
+    return CompileResult(
+        arch="plaid2x2", mapper="hierarchical", seed=seed,
+        workload={"name": name, "unroll": unroll, "iterations": 256,
+                  "domain": "linear-algebra"},
+    )
+
+
+# one op against the store per invocation; crashes are injected via the
+# REPRO_FAULTS environment the child inherits
+_CHILD = """
+import sys
+sys.path.insert(0, %r)
+from repro.compiler.store import ArtifactStore, key_for
+from repro.compiler.artifact import CompileResult
+
+root, op = sys.argv[1], sys.argv[2]
+seeds = [int(s) for s in sys.argv[3:]]
+
+def unmapped(seed):
+    return CompileResult(
+        arch="plaid2x2", mapper="hierarchical", seed=seed,
+        workload={"name": "atax", "unroll": 2, "iterations": 256,
+                  "domain": "linear-algebra"})
+
+store = ArtifactStore(root)
+for seed in seeds:
+    if op == "put":
+        digest = store.put(unmapped(seed))
+        print("PUT " + str(seed) + " " + digest, flush=True)
+    elif op == "get":
+        got = store.get(key_for(unmapped(seed)))
+        print(("HIT " if got is not None else "MISS ") + str(seed),
+              flush=True)
+    elif op == "read":
+        store.ls()
+        store.get(key_for(unmapped(seed)))
+if op == "compact":
+    store.compact()
+elif op == "gc":
+    store.gc()
+print("DONE", flush=True)
+""" % os.path.abspath(_SRC)
+
+
+def _child(root, op, seeds=(), faults=None):
+    env = dict(os.environ)
+    env.pop("REPRO_FAULTS", None)
+    if faults is not None:
+        env["REPRO_FAULTS"] = json.dumps(faults)
+    return subprocess.run(
+        [sys.executable, "-c", _CHILD, str(root), op]
+        + [str(s) for s in seeds],
+        capture_output=True, text=True, env=env, timeout=120)
+
+
+def _assert_consistent(root, committed_seeds):
+    """The recovered index must agree with ``entries/`` and serve every
+    committed artifact; a full gc rescan must reject nothing."""
+    store = ArtifactStore(str(root))
+    rows = store.index()
+    listed = store._listed_digests()
+    assert sorted(rows) == listed
+    for seed in committed_seeds:
+        key = key_for(_unmapped(seed=seed))
+        assert key.digest in rows, f"seed {seed} lost from index"
+        got = store.get(key)
+        assert got is not None and got.seed == seed
+    fresh = ArtifactStore(str(root))
+    fresh.gc()
+    assert fresh.counters.rejected == 0
+
+
+# -- hot path is append-only -------------------------------------------------
+
+
+def test_puts_append_journal_without_snapshot_rewrite(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    store.put(_unmapped(seed=0))
+    with open(store.index_path) as f:
+        snap = json.load(f)
+    assert snap["schema"] == SNAPSHOT_SCHEMA
+    assert snap["entries"] == {}  # rows ride in the journal, not here
+    before = os.stat(store.index_path).st_mtime_ns
+    for seed in range(1, 5):
+        store.put(_unmapped(seed=seed))
+        store.get(key_for(_unmapped(seed=seed)))
+    assert os.stat(store.index_path).st_mtime_ns == before  # never rewritten
+    with open(store.journal_path) as f:
+        lines = [json.loads(line) for line in f]
+    assert lines[0]["journal"] == JOURNAL_SCHEMA
+    assert [r["op"] for r in lines[1:]] == ["put"] + ["put", "touch"] * 4
+    rows = ArtifactStore(str(tmp_path)).index()
+    assert len(rows) == 5
+    assert all(rows[key_for(_unmapped(seed=s)).digest]["hits"] == (1 if s
+               else 0) for s in range(5))
+
+
+def test_oversized_journal_autocompacts(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    store._journal.compact_bytes = 512  # force frequent compaction
+    for seed in range(6):
+        store.put(_unmapped(seed=seed))
+    assert os.path.getsize(store.journal_path) < 4096
+    with open(store.index_path) as f:
+        snap = json.load(f)
+    assert len(snap["entries"]) >= 1  # compaction folded rows in
+    assert snap["epoch"] >= 1
+    rows = ArtifactStore(str(tmp_path)).index()
+    assert len(rows) == 6
+    # seq stays monotonic across compactions: the snapshot's base_seq
+    # carries the counter even when rows are folded
+    assert sorted(int(r["seq"]) for r in rows.values()) == list(range(1, 7))
+
+
+# -- crash-point sweep (the tentpole recovery gate) --------------------------
+
+
+@pytest.mark.parametrize("site,op,detail", [
+    ("store.put", "put", "before the entry file write"),
+    ("store.journal", "put", "after the entry write, before its journal "
+                             "record (orphan entry)"),
+    ("store.journal", "get", "before the serve's touch record"),
+    ("store.compact", "compact", "between the snapshot write and the "
+                                 "journal reset (stale epoch)"),
+    ("store.compact", "gc", "inside gc's rebuild"),
+])
+def test_kill9_at_every_write_point_recovers(tmp_path, site, op, detail):
+    root = str(tmp_path)
+    base = ArtifactStore(root)
+    for seed in (0, 1):
+        base.put(_unmapped(seed=seed))
+
+    crash = [{"mode": "crash", "site": site, "times": 1}]
+    target_seeds = [2] if op == "put" else [0] if op == "get" else []
+    res = _child(root, op, target_seeds, faults=crash)
+    assert res.returncode == 137, (site, op, res.stdout, res.stderr)
+    assert "DONE" not in res.stdout  # it really died mid-write
+
+    committed = [0, 1]
+    if site == "store.journal" and op == "put":
+        # the entry file committed before the crash: recovery must adopt
+        # the orphan, not lose the artifact
+        committed.append(2)
+    _assert_consistent(root, committed)
+
+
+def test_torn_journal_tail_truncated_on_recovery(tmp_path, capsys):
+    root = str(tmp_path)
+    store = ArtifactStore(root)
+    for seed in range(3):
+        store.put(_unmapped(seed=seed))
+    # tear the journal as a dying writer would: flip a byte mid-file and
+    # truncate the tail
+    torn = [{"mode": "corrupt", "site": "store.journal", "times": 1}]
+    res = _child(root, "put", [3], faults=torn)
+    assert res.returncode == 0
+    raw = open(store.journal_path, "rb").read()
+    assert raw  # corrupted, not emptied
+    _assert_consistent(root, [0, 1, 2, 3])  # reconcile re-adopts everything
+
+
+def test_stale_epoch_journal_recompacts_idempotently(tmp_path):
+    """A compaction that died between its snapshot write and the journal
+    reset leaves a journal whose epoch trails the snapshot.  Replaying it
+    is idempotent for rows; the next open folds it away."""
+    root = str(tmp_path)
+    store = ArtifactStore(root)
+    for seed in range(3):
+        store.put(_unmapped(seed=seed))
+    res = _child(root, "compact", [],
+                 faults=[{"mode": "crash", "site": "store.compact",
+                          "times": 1}])
+    assert res.returncode == 137
+    with open(store.index_path) as f:
+        snap_epoch = json.load(f)["epoch"]
+    with open(store.journal_path) as f:
+        journal_epoch = json.loads(f.readline())["epoch"]
+    assert journal_epoch < snap_epoch  # the crash window we claim to heal
+    fresh = ArtifactStore(root)
+    rows = fresh.index()  # detects staleness, re-compacts
+    # replaying the stale records may re-stamp seq, but never loses a row
+    # or reorders LRU recency
+    seqs = [int(rows[key_for(_unmapped(seed=s)).digest]["seq"])
+            for s in range(3)]
+    assert seqs == sorted(seqs)
+    # the re-compaction restored the invariant: journal extends snapshot
+    with open(store.index_path) as f:
+        now_epoch = json.load(f)["epoch"]
+    with open(store.journal_path) as f:
+        assert json.loads(f.readline())["epoch"] == now_epoch
+    assert now_epoch > snap_epoch
+    _assert_consistent(root, [0, 1, 2])
+
+
+# -- multi-process stress (satellite gate) -----------------------------------
+
+
+def test_concurrent_writers_reader_and_crashes_lose_no_append(tmp_path):
+    """Four writer processes (one crash-injected), a reader, and a
+    compactor race one journaled store: every *acknowledged* put must be
+    served afterwards and the index must agree with ``entries/``."""
+    root = str(tmp_path)
+    procs = []
+    # writer 0 crashes once mid-journal-append on its third put; 1-3 run
+    # clean; seeds are disjoint per writer
+    for w in range(4):
+        seeds = list(range(w * 10, w * 10 + 5))
+        faults = None
+        if w == 0:
+            faults = [{"mode": "crash", "site": "store.journal",
+                       "match": f"*seed={seeds[2]}*", "times": 1}]
+        procs.append((seeds, _Popen(root, "put", seeds, faults)))
+    reader = _Popen(root, "read", [0])
+    outs = []
+    for seeds, p in procs:
+        out, err = p.communicate(timeout=120)
+        outs.append((seeds, p.returncode, out, err))
+    reader.communicate(timeout=120)
+
+    acked = []
+    for seeds, rc, out, err in outs:
+        for line in out.splitlines():
+            if line.startswith("PUT "):
+                acked.append(int(line.split()[1]))
+        if rc != 0:
+            assert rc == 137, err  # the injected crash, nothing else
+    assert len(acked) >= 17  # 3 clean writers x5 + crasher's first two
+    _assert_consistent(root, acked)
+
+
+def _Popen(root, op, seeds, faults=None):
+    env = dict(os.environ)
+    env.pop("REPRO_FAULTS", None)
+    if faults is not None:
+        env["REPRO_FAULTS"] = json.dumps(faults)
+    return subprocess.Popen(
+        [sys.executable, "-c", _CHILD, str(root), op]
+        + [str(s) for s in seeds],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+
+
+# -- migration ---------------------------------------------------------------
+
+
+def test_legacy_whole_file_index_migrates_in_place(tmp_path):
+    root = str(tmp_path)
+    store = ArtifactStore(root)
+    k0 = key_for(_unmapped(seed=0))
+    store.put(_unmapped(seed=0))
+    store.put(_unmapped(seed=1))
+    store.get(k0)  # hits=1 bookkeeping that must survive migration
+    rows = store.index()
+
+    # rewrite the on-disk state as a PR 4 whole-file store-index@1
+    legacy = {"schema": "repro.compiler/store-index@1",
+              "entries": {d: dict(r) for d, r in rows.items()}}
+    with open(store.index_path, "w") as f:
+        json.dump(legacy, f)
+    os.unlink(store.journal_path)
+
+    fresh = ArtifactStore(root)
+    migrated = fresh.index()  # rebuild + migrate
+    assert sorted(migrated) == fresh._listed_digests()
+    assert migrated[k0.digest]["hits"] == 1
+    with open(fresh.index_path) as f:
+        assert json.load(f)["schema"] == SNAPSHOT_SCHEMA
+    assert os.path.exists(fresh.journal_path)
