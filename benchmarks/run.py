@@ -254,6 +254,37 @@ def bench_mapper_speed():
 
 
 # ---------------------------------------------------------------------------
+# Global analytic placement — warm re-map place wall (BENCH_mapper.json)
+# ---------------------------------------------------------------------------
+
+
+def bench_place():
+    if not os.path.exists(BENCH_MAPPER):
+        emit("bench_place", 0, "SKIP(run python scripts/bench_place.py)")
+        return
+    with open(BENCH_MAPPER) as f:
+        data = json.load(f)
+    runs = [r for r in data.get("runs", []) if "place_bench" in r]
+    if not runs:
+        emit("bench_place", 0, "SKIP(no place_bench recorded)")
+        return
+    pb = runs[-1]["place_bench"]
+    warm = pb["warm"]
+    best = min(warm["rows"],
+               key=lambda r: r["place_seeded_ms"] / (r["place_ms"] or 1))
+    cold = pb.get("cold", {})
+    ii = (f" cold II worse={cold['ii_worse']} better={cold['ii_better']}"
+          if cold else "")
+    emit(
+        "bench_place", warm["place_seeded_ms"] * 1e3,
+        f"warm re-map top-{pb['top']}: place {warm['place_ms']:.0f}ms -> "
+        f"{warm['place_seeded_ms']:.0f}ms ({warm['ratio']}x, best "
+        f"{best['workload']} {best['place_ms']:.0f}->"
+        f"{best['place_seeded_ms']:.0f}ms){ii} (target <1.0x)",
+    )
+
+
+# ---------------------------------------------------------------------------
 # Simulator throughput — batched vs scalar verification (BENCH_mapper.json)
 # ---------------------------------------------------------------------------
 
@@ -416,6 +447,7 @@ def main() -> None:
     bench_scalability()
     bench_mappers()
     bench_mapper_speed()
+    bench_place()
     bench_sim_throughput()
     bench_domain()
     bench_kernels()

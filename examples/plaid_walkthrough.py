@@ -13,8 +13,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.core.arch import make_arch
 from repro.core.mapper import HierarchicalMapper, NodeGreedyMapper
 from repro.core.motifs import generate_motifs
-from repro.core.power_area import energy_uj, fabric_area_um2, fabric_power_uw
-from repro.core.simulate import simulate
+from repro.core.power_area import energy_sweep, energy_uj, fabric_area_um2, \
+    fabric_power_uw
 from repro.core.spatial import map_spatial
 from repro.core.workloads import build_workload, workload_by_name
 
@@ -33,17 +33,21 @@ print(f"  standalone: {standalone}")
 plaid = HierarchicalMapper(make_arch("plaid2x2"), seed=0).map(g)
 st = NodeGreedyMapper(make_arch("st4x4"), seed=0).map(g)
 sp = map_spatial(g)
-simulate(plaid, iterations=3)
-simulate(st, iterations=3)
 print(f"\nPlaid 2x2      : II={plaid.ii:2d}  cycles({w.iterations} it)="
       f"{plaid.cycles(w.iterations)}")
 print(f"Spatio-temporal: II={st.ii:2d}  cycles={st.cycles(w.iterations)}")
 print(f"Spatial        : segments={sp.n_segments}  cycles={sp.cycles(w.iterations)}")
 
-for arch, cycles in (("plaid2x2", plaid.cycles(w.iterations)),
-                     ("st4x4", st.cycles(w.iterations)),
-                     ("spatial4x4", sp.cycles(w.iterations))):
-    p = fabric_power_uw(arch)["total"]
-    a = fabric_area_um2(arch)["total"]
-    print(f"{arch:12s} power={p:7.1f}µW  area={a:8.0f}µm²  "
-          f"energy={energy_uj(arch, cycles):8.4f}µJ")
+# both modulo mappings verify through ONE batched simulator call; the
+# spatial result has no modulo mapping, so its row stays analytic
+rows = energy_sweep([("plaid2x2", plaid, w.iterations),
+                     ("st4x4", st, w.iterations)])
+for r in rows:
+    assert r["verified"], r
+    print(f"{r['arch']:12s} power={r['power_uw']:7.1f}µW  "
+          f"area={r['area_um2']:8.0f}µm²  energy={r['energy_uj']:8.4f}µJ  "
+          f"(verified, {r['sim_backend']})")
+sp_cycles = sp.cycles(w.iterations)
+print(f"{'spatial4x4':12s} power={fabric_power_uw('spatial4x4')['total']:7.1f}µW  "
+      f"area={fabric_area_um2('spatial4x4')['total']:8.0f}µm²  "
+      f"energy={energy_uj('spatial4x4', sp_cycles):8.4f}µJ")

@@ -49,6 +49,30 @@ timeout "$BUDGET" python -m repro.core.collect --quick --out "$OUT" \
 echo "== II diff vs golden =="
 python scripts/diff_ii.py "$OUT" tests/golden_ii_quick.json
 
+echo "== global placer gate: pathfinder_global II-no-worse on quick grid =="
+GOUT=$(mktemp /tmp/ci_global.XXXXXX.json); rm -f "$GOUT"
+# run the seeded composition live over the quick grid (full budgets: the
+# golden was recorded without REPRO_QUICK) and hold it to its golden pin
+timeout "$BUDGET" python - "$GOUT" <<'EOF'
+import json, sys
+from repro.core.arch import make_arch
+from repro.core.workloads import build_workload, quick_workloads
+from repro.mapping.mappers import PathFinderGlobalMapper
+
+arch = make_arch("plaid3x3")
+out = {}
+for w in quick_workloads():
+    r = PathFinderGlobalMapper(arch, seed=0).map(build_workload(w))
+    out[f"{w.name}_u{w.unroll}"] = {"pathfinder_global": r.ii if r else None}
+json.dump(out, open(sys.argv[1], "w"), indent=1)
+EOF
+python scripts/diff_ii.py "$GOUT" tests/golden_ii_quick_global.json
+# warm re-map place wall must stay measurably reduced (ratio gate; the
+# measured total is ~0.74x, the 1.25x ceiling absorbs machine noise) and
+# the run lands in the bench trajectory
+timeout "$BUDGET" python scripts/bench_place.py --skip-cold --top 4 \
+    --bench-out BENCH_mapper.json --note "ci place gate"
+
 echo "== store roundtrip: warm second pass must be a 100% hit =="
 STORE_DIR=$(mktemp -d /tmp/ci_store.XXXXXX)
 S1=$(mktemp /tmp/ci_store_r1.XXXXXX.json); rm -f "$S1"

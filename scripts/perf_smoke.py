@@ -34,10 +34,25 @@ def main(argv=None) -> int:
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail if latest quick wall/workload exceeds the "
                          "previous run by more than this factor")
+    ap.add_argument("--max-place-ratio", type=float, default=1.25,
+                    help="fail if the latest place_bench warm seeded/"
+                         "unseeded place ratio exceeds this factor")
     args = ap.parse_args(argv)
 
     with open(args.bench) as f:
         data = json.load(f)
+
+    # global-placer warm re-map gate (scripts/bench_place.py entries)
+    place = [r for r in data.get("runs", []) if "place_bench" in r]
+    if place:
+        warm = place[-1]["place_bench"]["warm"]
+        print(f"perf-smoke: place_bench warm {warm['place_ms']:.0f}ms -> "
+              f"{warm['place_seeded_ms']:.0f}ms ({warm['ratio']}x, max "
+              f"{args.max_place_ratio}x)")
+        if warm["ratio"] > args.max_place_ratio:
+            print(f"perf-smoke: FAIL — warm seeded place ratio "
+                  f"{warm['ratio']}x > {args.max_place_ratio}x")
+            return 1
     quick = [r for r in data.get("runs", [])
              if r.get("quick") and r.get("workloads_run")
              and "store" not in r]

@@ -25,7 +25,7 @@ Inventories:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, List, Sequence, Tuple
 
 # ---- absolute anchors -----------------------------------------------------
 ST_PE_POWER_UW = 175.0  # assumed HyCUBE-class 4x4 fabric = 2.8 mW total
@@ -132,6 +132,41 @@ def fabric_area_um2(arch_name: str) -> Dict[str, float]:
 def energy_uj(arch_name: str, cycles: int, freq_hz: float = 100e6) -> float:
     p_uw = fabric_power_uw(arch_name)["total"]
     return p_uw * 1e-6 * cycles / freq_hz * 1e6  # µJ
+
+
+def energy_sweep(entries: Sequence[Tuple[str, object, int]],
+                 sim_iterations: int = 3, freq_hz: float = 100e6,
+                 backend: str = "auto") -> List[Dict[str, object]]:
+    """Verified power/area/energy table over mapped fabrics.
+
+    ``entries`` is a sequence of ``(arch_name, mapping, iterations)``
+    rows.  Every mapping in the sweep is cycle-verified through ONE
+    batched :func:`repro.sim.simulate_batch` call (the vectorized
+    simulator; a failing mapping is a ``verified: False`` row, not an
+    exception) instead of the per-mapping scalar oracle the walkthroughs
+    used to loop over, then folded with the structural power model into
+    per-fabric energy.  Spatial results have no modulo mapping to batch —
+    callers keep using :func:`energy_uj` on their analytic cycle counts.
+    """
+    from repro.sim import simulate_batch  # lazy: repro.sim builds on core
+
+    mappings = [m for _, m, _ in entries]
+    verdicts = simulate_batch(mappings, iterations=sim_iterations,
+                              backend=backend)
+    out: List[Dict[str, object]] = []
+    for (arch_name, m, iters), v in zip(entries, verdicts):
+        cycles = m.cycles(iters)
+        out.append({
+            "arch": arch_name,
+            "ii": m.ii,
+            "cycles": cycles,
+            "verified": bool(v.ok),
+            "sim_backend": v.backend,
+            "power_uw": fabric_power_uw(arch_name)["total"],
+            "area_um2": fabric_area_um2(arch_name)["total"],
+            "energy_uj": energy_uj(arch_name, cycles, freq_hz),
+        })
+    return out
 
 
 def headline_ratios() -> Dict[str, float]:

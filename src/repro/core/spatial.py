@@ -16,6 +16,7 @@ from repro.compiler.registry import register_mapper
 from repro.core.arch import Arch, make_arch
 from repro.core.dfg import DFG
 from repro.mapping import Mapping, NodeGreedyMapper
+from repro.mapping.cluster import pack_segments
 
 RECONFIG_CYCLES = 16  # config-memory reload between segments
 
@@ -54,7 +55,20 @@ def _partition(dfg: DFG, max_nodes: int, mem_cap: int = 3) -> Optional[List[List
     latest segment that already holds its producers, if it has room — so
     load→mul→acc chains stay together and cut edges are rare. Memory ops
     per segment are bounded (4 mem PEs at II=1, slack left for cut pairs);
-    recurrence-closed groups are atomic."""
+    recurrence-closed groups are atomic.
+
+    Runs on the vectorized clustering core shared with the global analytic
+    placer (:func:`repro.mapping.cluster.pack_segments`); the pure-Python
+    greedy is kept below as :func:`_partition_legacy` and the two are held
+    decision-for-decision equivalent by ``tests/test_spatial_partition.py``.
+    """
+    return pack_segments(dfg, max_nodes, mem_cap)
+
+
+def _partition_legacy(dfg: DFG, max_nodes: int,
+                      mem_cap: int = 3) -> Optional[List[List[int]]]:
+    """Reference implementation of :func:`_partition` (the pre-vectorized
+    greedy), retained as the equivalence oracle."""
     asap = dfg.asap()
     order = [
         n for n in dfg.topo_order()

@@ -13,6 +13,7 @@ mapper                    pipeline
 ``node_greedy``           extract (node units) → place → finalize
 ``pathfinder``            extract → place+negotiate (multi-start, composite)
 ``pathfinder_selective``  same, selective rip-up pinned on
+``pathfinder_global``     extract → global_place → place+negotiate
 ========================  ==================================================
 
 Composing a new mapper is: subclass :class:`PipelineMapper`, return pass
@@ -43,6 +44,7 @@ from repro.mapping.passes.extract import (
     node_units,
 )
 from repro.mapping.passes.finalize import FinalizePass
+from repro.mapping.passes.global_place import GlobalPlacementPass
 from repro.mapping.passes.negotiate import (
     LegacyNegotiationPass,
     NegotiatedMultiStartPass,
@@ -76,6 +78,9 @@ class PipelineMapper:
     use_route_cache = True
     #: scoped cache tier — only for mappers with their own golden records
     route_cache_scoped = False
+    #: analytic global seed placement ahead of detailed placement
+    #: (global-then-detailed; read at use time by GlobalPlacementPass)
+    global_seed = False
     #: per-II RNG stream multiplier (node-level pipelines share one RNG
     #: between construction and annealing, exactly like the monolith)
     rng_stride = 1337
@@ -174,6 +179,16 @@ class SAMapper(PipelineMapper):
     fixed_ii: Optional[int] = None
     rng_stride = 1337
 
+    def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 4000):
+        super().__init__(arch, seed, time_budget)
+        if type(self) is SAMapper:
+            # scoped route-cache tier for SA moves (slot_epoch-validated
+            # reuse across displace/re-place cycles), golden-gated by
+            # tests/golden_ii_sa.json.  Instance-only: subclasses
+            # (hierarchical / node_greedy / legacy pathfinder) keep their
+            # own golden-gated settings.
+            self.route_cache_scoped = True
+
     def build_passes(self):
         return (GreedyConstructionPass(), SAImprovementPass(),
                 FinalizePass(check_nodes=True))
@@ -218,15 +233,19 @@ class HierarchicalMapper(SAMapper):
     restarts = 10
 
     def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 1500,
-                 motif_seed: int = 0):
+                 motif_seed: int = 0, global_seed: Optional[bool] = None):
         super().__init__(arch, seed, time_budget)
         self.motif_seed = motif_seed
+        if global_seed is not None:
+            self.global_seed = global_seed
         if os.environ.get("REPRO_QUICK"):
             self.restarts = 4  # test-suite --quick path: fewer restarts
 
     def build_passes(self):
-        return (UnitExtractionPass(), MultiStartUnitPlacementPass(),
-                FinalizePass())
+        # GlobalPlacementPass is a no-op unless global_seed is on (read at
+        # use time), so default compositions stay bit-identical
+        return (UnitExtractionPass(), GlobalPlacementPass(),
+                MultiStartUnitPlacementPass(), FinalizePass())
 
     def units_of(self, dfg: DFG) -> List[Unit]:
         return hierarchical_units(self.ctx, dfg, self.motif_seed)
@@ -290,8 +309,9 @@ class PathFinderMapper2(NodeGreedyMapper):
     construction_restarts = 4
 
     def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 1500,
-                 motif_seed: int = 0, negotiation: Optional[str] = None):
-        super().__init__(arch, seed, time_budget, motif_seed)
+                 motif_seed: int = 0, negotiation: Optional[str] = None,
+                 global_seed: Optional[bool] = None):
+        super().__init__(arch, seed, time_budget, motif_seed, global_seed)
         if negotiation is not None:
             self.negotiation = negotiation
         if self.negotiation not in ("full", "selective"):
@@ -302,7 +322,8 @@ class PathFinderMapper2(NodeGreedyMapper):
         self.route_cache_scoped = self.negotiation == "selective"
 
     def build_passes(self):
-        return (UnitExtractionPass(), NegotiatedMultiStartPass())
+        return (UnitExtractionPass(), GlobalPlacementPass(),
+                NegotiatedMultiStartPass())
 
     def restart_rng(self, ii: int, restart: int) -> random.Random:
         return random.Random(self.seed + ii * 77 + restart * 13)
@@ -320,3 +341,22 @@ class PathFinderSelectiveMapper(PathFinderMapper2):
     ``tests/golden_ii_quick_selective.json``."""
 
     negotiation = "selective"
+
+
+@register_mapper(
+    "pathfinder_global",
+    description="global analytic seed placement + negotiated congestion",
+)
+class PathFinderGlobalMapper(PathFinderMapper2):
+    """``pathfinder`` (selective) with the global-then-detailed flow on:
+    cluster → quadratic relaxation over the distance tables → legalized
+    seed placement (``global_place`` pass), consumed by the negotiated
+    construction as one extra warm-start attempt ahead of its unchanged
+    restart loop.  II is structurally no worse than ``pathfinder`` on
+    every cell (the fallback restarts are bit-identical); gated by
+    ``tests/golden_ii_quick_global.json`` and the ci.sh quick-grid diff.
+    Not part of the evaluation grid (no ``jobs``) — select it with
+    ``compile(..., mapper="pathfinder_global")`` or ``global_seed=True``
+    on the ``pathfinder`` family."""
+
+    global_seed = True

@@ -91,6 +91,9 @@ class PassContext:
         self._units_cache: Optional[Tuple[DFG, list]] = None
         self.cand_arrays_cache: Dict[tuple, tuple] = {}
         self.scan_memo: Dict[tuple, object] = {}
+        # global-placement relaxed positions (II-independent, so the II
+        # sweep reuses one relaxation per DFG); (dfg, ndarray) like tables
+        self.relax_pos_cache: Optional[tuple] = None
         # op -> FU-id candidates; arch-dependent only, survives DFG changes
         self.fu_cand_cache: Dict[str, List[int]] = {}
 
@@ -114,6 +117,7 @@ class PassContext:
         self.cand_arrays_cache.clear()
         self.scan_memo.clear()
         self._units_cache = None
+        self.relax_pos_cache = None
 
     def units_for(self, dfg: DFG) -> list:
         """Cached unit decomposition (``config.units_of`` is deterministic

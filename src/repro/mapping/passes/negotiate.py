@@ -75,7 +75,15 @@ class NegotiatedMultiStartPass(MapperPass):
         placer = ctx.placer
         dfg, ii = state.dfg, state.ii
         units = state.units
-        for restart in range(getattr(cfg, "construction_restarts", 4)):
+        seed = state.scratch.get("global_seed")
+        # the global seed adds one extra attempt (restart stream -1) in
+        # front of the unchanged restart loop: each restart builds a fresh
+        # MRRG and draws its own RNG stream, so the fallback restarts are
+        # bit-identical to the unseeded composition — quality can only
+        # improve (the II-no-worse gate in ci.sh holds this structurally)
+        restarts = ([-1] if seed else []) \
+            + list(range(getattr(cfg, "construction_restarts", 4)))
+        for restart in restarts:
             ctx.check_deadline(f"construction restart {restart}")
             rng = cfg.restart_rng(ii, restart)
             t_place = perf_counter()
@@ -84,6 +92,9 @@ class NegotiatedMultiStartPass(MapperPass):
             ok = True
             for u in units:
                 ctx.check_deadline(f"unit construction (restart {restart})")
+                if restart < 0 and placer.place_unit_seeded(
+                        mrrg, dfg, mapping, u, seed):
+                    continue
                 if not placer.place_unit_overuse(mrrg, dfg, mapping, u, rng):
                     ok = False
                     break
@@ -92,7 +103,12 @@ class NegotiatedMultiStartPass(MapperPass):
                 continue
             t_rounds = perf_counter()
             success = False
-            for it in range(cfg.neg_rounds):
+            # the seeded warm start gets a short negotiation budget: a good
+            # seed converges in a handful of rounds, and a capped failure
+            # just falls through to the unchanged restart loop
+            rounds = cfg.neg_rounds if restart >= 0 \
+                else max(4, cfg.neg_rounds // 4)
+            for it in range(rounds):
                 ctx.check_deadline(f"negotiation round {it}")
                 if not mrrg.has_overuse() and placer.all_routed(dfg, mapping):
                     need = sum(1 for n in dfg.nodes.values()

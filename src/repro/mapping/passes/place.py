@@ -776,6 +776,37 @@ class UnitPlacer(NodePlacer):
                 bad_nodes.add(n)
         return [u for u in units if any(n in bad_nodes for n in u.nodes)]
 
+    def place_unit_seeded(self, mrrg, dfg, mapping, u, seed,
+                          *, allow_overuse: bool = False) -> bool:
+        """Warm-start protocol (global-then-detailed): place the unit
+        exactly where the global seed put it, provided every member has a
+        seed slot, the slots are still free, and the placement passes the
+        exact span filter against the current partial mapping.  Returns
+        ``False`` with all state untouched when the seed is stale — the
+        caller falls back to its from-scratch scan for this unit."""
+        plc = []
+        for n in u.nodes:
+            s = seed.get(n)
+            if s is None:
+                return False
+            plc.append((n, s[0], s[1]))
+        if any(not mrrg.fu_free(fu, t) for _, fu, t in plc):
+            return False
+        if not self.span_ok(dfg, mapping, plc):
+            return False
+        if allow_overuse:
+            nodes = set()
+            for n, fu, t in plc:
+                mapping.place[n] = fu
+                mapping.time[n] = t
+                mrrg.take_fu(fu, t, n)
+                nodes.add(n)
+            self.router.route_node_edges(
+                mrrg, dfg, mapping, nodes, allow_overuse=True
+            )
+            return True
+        return self.try_placement_strict(mrrg, dfg, mapping, plc) is not None
+
     def place_unit_overuse(self, mrrg, dfg, mapping, u, rng) -> bool:
         """Overuse-tolerant unit placement (the negotiated mappers'
         construction): earliest-slot candidates, congestion allowed."""
@@ -890,6 +921,35 @@ class MultiStartUnitPlacementPass(MapperPass):
         placer = ctx.placer
         dfg, ii = state.dfg, state.ii
         base_units = state.units
+        seed = state.scratch.get("global_seed")
+        if seed:
+            # seeded warm start: one extra attempt in front of the
+            # unchanged restart loop (restart stream -1), taking each
+            # unit's seed slot when it is still exactly feasible and
+            # falling back to a first-feasible scan otherwise —
+            # structurally no worse than the unseeded composition.  When
+            # more than a quarter of the units go stale the seed is not
+            # holding, so the attempt aborts instead of paying full scans
+            # for a placement that has already diverged from the seed.
+            ctx.check_deadline("seeded placement")
+            rng = cfg.restart_rng(ii, -1)
+            mrrg = ctx.new_mrrg(ii)
+            mapping = Mapping(ctx.arch, dfg, ii)
+            stale_budget = max(2, len(base_units) // 4)
+            ok = True
+            for u in base_units:
+                ctx.check_deadline("seeded unit placement")
+                if placer.place_unit_seeded(mrrg, dfg, mapping, u, seed):
+                    continue
+                stale_budget -= 1
+                if stale_budget < 0 or not placer.place_unit_feasible(
+                        mrrg, dfg, mapping, u, rng, max_feasible=1):
+                    ok = False
+                    break
+            if ok and placer.valid(dfg, mapping, mrrg):
+                state.mrrg = mrrg
+                state.mapping = mapping
+                return CONTINUE
         for restart in range(cfg.restarts):
             ctx.check_deadline(f"placement restart {restart}")
             rng = cfg.restart_rng(ii, restart)

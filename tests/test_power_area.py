@@ -28,3 +28,28 @@ def test_derived_headlines_near_paper():
 def test_specialized_variants_cheaper():
     assert fabric_power_uw("plaid_ml")["total"] < fabric_power_uw("plaid2x2")["total"]
     assert fabric_area_um2("st4x4_ml")["total"] < fabric_area_um2("st4x4")["total"]
+
+
+def test_energy_sweep_batched_verification():
+    """energy_sweep runs every mapping through one simulate_batch call
+    and folds verified cycle counts into the structural energy model."""
+    from repro.core.arch import make_arch
+    from repro.core.power_area import energy_sweep, energy_uj
+    from repro.core.workloads import build_workload, workload_by_name
+    from repro.mapping.mappers import HierarchicalMapper, NodeGreedyMapper
+
+    w = workload_by_name("atax", 2)
+    g = build_workload(w)
+    plaid = HierarchicalMapper(make_arch("plaid2x2"), seed=0).map(g)
+    st = NodeGreedyMapper(make_arch("st4x4"), seed=0).map(g)
+    assert plaid is not None and st is not None
+
+    rows = energy_sweep([("plaid2x2", plaid, w.iterations),
+                         ("st4x4", st, w.iterations)])
+    assert [r["arch"] for r in rows] == ["plaid2x2", "st4x4"]
+    for r, m in zip(rows, (plaid, st)):
+        assert r["verified"] is True
+        assert r["ii"] == m.ii
+        assert r["cycles"] == m.cycles(w.iterations)
+        assert r["energy_uj"] == energy_uj(r["arch"], r["cycles"])
+        assert r["energy_uj"] > 0
