@@ -285,6 +285,32 @@ def bench_place():
 
 
 # ---------------------------------------------------------------------------
+# Vectorized route engine — cold route-phase speedup (BENCH_mapper.json)
+# ---------------------------------------------------------------------------
+
+
+def bench_route():
+    if not os.path.exists(BENCH_MAPPER):
+        emit("bench_route", 0, "SKIP(run python scripts/bench_route.py)")
+        return
+    with open(BENCH_MAPPER) as f:
+        data = json.load(f)
+    runs = [r for r in data.get("runs", []) if "route_bench" in r]
+    if not runs:
+        emit("bench_route", 0, "SKIP(no route_bench recorded)")
+        return
+    rb = runs[-1]["route_bench"]
+    best = max(rb["rows"], key=lambda r: r["speedup"])
+    emit(
+        "bench_route", rb["route_auto_ms"] * 1e3,
+        f"cold {rb['mapper']} top-{rb['top']}: route "
+        f"{rb['route_legacy_ms']:.0f}ms -> {rb['route_auto_ms']:.0f}ms "
+        f"({rb['speedup']}x, floor {rb['speedup_floor']}x, best "
+        f"{best['workload']} {best['speedup']}x) (target >=1.5x/workload)",
+    )
+
+
+# ---------------------------------------------------------------------------
 # Simulator throughput — batched vs scalar verification (BENCH_mapper.json)
 # ---------------------------------------------------------------------------
 
@@ -448,6 +474,7 @@ def main() -> None:
     bench_mappers()
     bench_mapper_speed()
     bench_place()
+    bench_route()
     bench_sim_throughput()
     bench_domain()
     bench_kernels()

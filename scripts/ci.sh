@@ -73,6 +73,34 @@ python scripts/diff_ii.py "$GOUT" tests/golden_ii_quick_global.json
 timeout "$BUDGET" python scripts/bench_place.py --skip-cold --top 4 \
     --bench-out BENCH_mapper.json --note "ci place gate"
 
+echo "== route engine gate: array-DP core bit-identical and faster =="
+# cold pathfinder sweep on the route-dominated cells, legacy vs auto: the
+# bench asserts full-trajectory bit-identity per workload and fails if
+# any per-workload route-phase speedup drops below 1.5x (measured floor
+# ~1.9x); the run lands in the bench trajectory for perf_smoke to gate
+timeout "$BUDGET" python scripts/bench_route.py --top 4 --min-speedup 1.5 \
+    --bench-out BENCH_mapper.json --note "ci route gate"
+
+echo "== route window gate: pathfinder_window II-no-worse on quick grid =="
+WOUT=$(mktemp /tmp/ci_window.XXXXXX.json); rm -f "$WOUT"
+# the top-K candidate window is trajectory-changing by design, so it holds
+# its own golden pin (recorded at 0 II regressions vs the full-TABLE2
+# pathfinder golden)
+timeout "$BUDGET" python - "$WOUT" <<'EOF'
+import json, sys
+from repro.core.arch import make_arch
+from repro.core.workloads import build_workload, quick_workloads
+from repro.mapping.mappers import PathFinderWindowMapper
+
+arch = make_arch("plaid2x2")
+out = {}
+for w in quick_workloads():
+    r = PathFinderWindowMapper(arch, seed=0).map(build_workload(w))
+    out[f"{w.name}_u{w.unroll}"] = {"pf_on_plaid": r.ii if r else None}
+json.dump(out, open(sys.argv[1], "w"), indent=1)
+EOF
+python scripts/diff_ii.py "$WOUT" tests/golden_ii_quick_window.json
+
 echo "== store roundtrip: warm second pass must be a 100% hit =="
 STORE_DIR=$(mktemp -d /tmp/ci_store.XXXXXX)
 S1=$(mktemp /tmp/ci_store_r1.XXXXXX.json); rm -f "$S1"

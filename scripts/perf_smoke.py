@@ -37,6 +37,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-place-ratio", type=float, default=1.25,
                     help="fail if the latest place_bench warm seeded/"
                          "unseeded place ratio exceeds this factor")
+    ap.add_argument("--max-route-ratio", type=float, default=2.0,
+                    help="fail if any workload's route_bench auto route "
+                         "time regressed vs the previous entry by more "
+                         "than this factor")
     args = ap.parse_args(argv)
 
     with open(args.bench) as f:
@@ -53,6 +57,29 @@ def main(argv=None) -> int:
             print(f"perf-smoke: FAIL — warm seeded place ratio "
                   f"{warm['ratio']}x > {args.max_place_ratio}x")
             return 1
+    # vectorized route-engine gate (scripts/bench_route.py entries):
+    # per-workload auto-engine route time must not regress vs the
+    # previous recorded bench (keyed by workload — the bench set can grow)
+    route = [r for r in data.get("runs", []) if "route_bench" in r]
+    if route:
+        rb = route[-1]["route_bench"]
+        print(f"perf-smoke: route_bench {rb['route_legacy_ms']:.0f}ms -> "
+              f"{rb['route_auto_ms']:.0f}ms ({rb['speedup']}x, "
+              f"per-workload floor {rb['speedup_floor']}x)")
+        if len(route) >= 2:
+            prev_rows = {row["workload"]: row["route_auto_ms"]
+                         for row in route[-2]["route_bench"]["rows"]}
+            for row in rb["rows"]:
+                before = prev_rows.get(row["workload"])
+                if not before:
+                    continue
+                rr = row["route_auto_ms"] / before
+                if rr > args.max_route_ratio:
+                    print(f"perf-smoke: FAIL — {row['workload']} route "
+                          f"time regressed {rr:.2f}x > "
+                          f"{args.max_route_ratio}x "
+                          f"({before:.0f}ms -> {row['route_auto_ms']:.0f}ms)")
+                    return 1
     quick = [r for r in data.get("runs", [])
              if r.get("quick") and r.get("workloads_run")
              and "store" not in r]

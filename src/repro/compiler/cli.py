@@ -289,6 +289,13 @@ def _stage_line(art: CompileResult) -> Optional[str]:
             f"{rc_.get('hits_scoped', 0)} scoped / "
             f"{rc_.get('misses', 0)} misses)"
         )
+        fo = rc_.get("fanout")
+        if fo and fo.get("edges"):
+            layers = fo.get("layers_built", 0) + fo.get("layers_reused", 0)
+            parts.append(
+                f"fanout {fo['edges']} edges/{fo.get('batches', 0)} batches"
+                f" (layers {fo.get('layers_reused', 0)}/{layers} shared)"
+            )
     return "  ".join(parts)
 
 

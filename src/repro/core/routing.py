@@ -176,9 +176,44 @@ class RoutingEngine:
         ]
         self.cap: List[int] = [r.cap for r in arch.rnodes]
         self.holdable: List[bool] = [r.holdable for r in arch.rnodes]
+        self.cap_arr = np.asarray(self.cap, dtype=np.int32)
+        # CSR forms of the routing graph for the vectorized array-DP core
+        # (passes.route.FanoutSession).  succ_indptr/succ_indices is the
+        # forward adjacency; pred_indptr/pred_indices is its transpose, the
+        # form the per-layer gather -> reduce relaxation consumes.  Each
+        # predecessor segment is ascending (built by scanning sources in
+        # ascending order), so an argmin's first occurrence over a segment
+        # reproduces the legacy relaxation's smallest-rid tie-break.
+        counts = np.asarray([len(s) for s in self.succ], dtype=np.int64)
+        self.succ_indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(counts, out=self.succ_indptr[1:])
+        self.succ_indices = np.asarray(
+            [v for s in self.succ for v in s], dtype=np.int64
+        )
+        preds: List[List[int]] = [[] for _ in range(n)]
+        for u in range(n):
+            for v in self.succ[u]:
+                preds[v].append(u)
+        pcounts = np.asarray([len(p) for p in preds], dtype=np.int64)
+        self.pred_indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(pcounts, out=self.pred_indptr[1:])
+        self.pred_indices = np.asarray(
+            [u for p in preds for u in p], dtype=np.int64
+        )
+        # gather index padded with sentinel row ``n`` (held at +inf by the
+        # search) so ``minimum.reduceat`` stays in bounds when the trailing
+        # segments are empty; empty segments are masked via ``pred_empty``
+        self.pred_gather = np.concatenate(
+            [self.pred_indices, np.asarray([n], dtype=np.int64)]
+        )
+        self.pred_empty = pcounts == 0
         self.dist = self._all_pairs_hops()
         self._starts: Dict[int, List[int]] = {}
         self._h: Dict[int, List[int]] = {}
+        self._starts_arr: Dict[int, np.ndarray] = {}
+        self._h_arr: Dict[int, np.ndarray] = {}
+        self._reads: Dict[int, List[int]] = {}
+        self._reads_arr: Dict[int, np.ndarray] = {}
         self._min_fu_span: Dict[Tuple[int, int], int] = {}
         self._min_span_mat: Optional[np.ndarray] = None
         self._route_span_mat: Optional[np.ndarray] = None
@@ -225,6 +260,41 @@ class RoutingEngine:
                 h = [UNREACH] * self.n
             self._h[fu.id] = h
         return h
+
+    def starts_arr(self, fu) -> np.ndarray:
+        """:meth:`starts` as a cached int64 index array (array-DP core)."""
+        out = self._starts_arr.get(fu.id)
+        if out is None:
+            out = np.asarray(self.starts(fu), dtype=np.int64)
+            self._starts_arr[fu.id] = out
+        return out
+
+    def h_arr(self, fu) -> np.ndarray:
+        """:meth:`h_to_reads` as a cached int64 vector (array-DP core)."""
+        out = self._h_arr.get(fu.id)
+        if out is None:
+            out = np.asarray(self.h_to_reads(fu), dtype=np.int64)
+            self._h_arr[fu.id] = out
+        return out
+
+    def reads(self, fu) -> List[int]:
+        """Cached ``list(set(fu.reads))`` — the exact container the router's
+        arrival scan historically iterated per call.  The set's iteration
+        order is deterministic for a given content (CPython), and it is the
+        arrival tie-break, so the cache must preserve it (NOT sort it)."""
+        out = self._reads.get(fu.id)
+        if out is None:
+            out = list(set(fu.reads))
+            self._reads[fu.id] = out
+        return out
+
+    def reads_arr(self, fu) -> np.ndarray:
+        """:meth:`reads` as a cached int64 index array, same order."""
+        out = self._reads_arr.get(fu.id)
+        if out is None:
+            out = np.asarray(self.reads(fu), dtype=np.int64)
+            self._reads_arr[fu.id] = out
+        return out
 
     def min_route_span(self, src_fu, dst_fu) -> int:
         """Exact minimum elapsed cycles for a value from ``src_fu`` to reach

@@ -14,6 +14,7 @@ mapper                    pipeline
 ``pathfinder``            extract → place+negotiate (multi-start, composite)
 ``pathfinder_selective``  same, selective rip-up pinned on
 ``pathfinder_global``     extract → global_place → place+negotiate
+``pathfinder_window``     same, top-K candidate-window route beam opted in
 ========================  ==================================================
 
 Composing a new mapper is: subclass :class:`PipelineMapper`, return pass
@@ -81,6 +82,16 @@ class PipelineMapper:
     #: analytic global seed placement ahead of detailed placement
     #: (global-then-detailed; read at use time by GlobalPlacementPass)
     global_seed = False
+    #: route search core — "auto" (span-dispatched array/scalar hybrid),
+    #: "vector" (always the array-DP core), "legacy" (the scalar
+    #: equivalence oracle); all three are bit-identical (read at use time
+    #: by Router.route_edge_list)
+    route_engine = "auto"
+    #: opt-in congestion-aware candidate window: keep only the K cheapest
+    #: slots per search layer (deterministic beam).  Trajectory-CHANGING —
+    #: off (None) by default and golden-gated separately
+    #: (tests/golden_ii_quick_window.json)
+    route_window: Optional[int] = None
     #: per-II RNG stream multiplier (node-level pipelines share one RNG
     #: between construction and annealing, exactly like the monolith)
     rng_stride = 1337
@@ -233,11 +244,14 @@ class HierarchicalMapper(SAMapper):
     restarts = 10
 
     def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 1500,
-                 motif_seed: int = 0, global_seed: Optional[bool] = None):
+                 motif_seed: int = 0, global_seed: Optional[bool] = None,
+                 route_window: Optional[int] = None):
         super().__init__(arch, seed, time_budget)
         self.motif_seed = motif_seed
         if global_seed is not None:
             self.global_seed = global_seed
+        if route_window is not None:
+            self.route_window = route_window
         if os.environ.get("REPRO_QUICK"):
             self.restarts = 4  # test-suite --quick path: fewer restarts
 
@@ -310,8 +324,11 @@ class PathFinderMapper2(NodeGreedyMapper):
 
     def __init__(self, arch: Arch, seed: int = 0, time_budget: int = 1500,
                  motif_seed: int = 0, negotiation: Optional[str] = None,
-                 global_seed: Optional[bool] = None):
+                 global_seed: Optional[bool] = None,
+                 route_window: Optional[int] = None):
         super().__init__(arch, seed, time_budget, motif_seed, global_seed)
+        if route_window is not None:
+            self.route_window = route_window
         if negotiation is not None:
             self.negotiation = negotiation
         if self.negotiation not in ("full", "selective"):
@@ -360,3 +377,22 @@ class PathFinderGlobalMapper(PathFinderMapper2):
     on the ``pathfinder`` family."""
 
     global_seed = True
+
+
+@register_mapper(
+    "pathfinder_window",
+    description="pathfinder with the congestion-aware top-K route window",
+)
+class PathFinderWindowMapper(PathFinderMapper2):
+    """``pathfinder`` (selective) with the congestion-aware candidate
+    window opted in: every route-search layer is pruned to its
+    ``route_window`` cheapest slots (deterministic beam over the array-DP
+    core).  Trajectory-changing by design — the coarser search trades
+    optimality of individual routes for narrower layers — so it carries
+    its own golden record (``tests/golden_ii_quick_window.json``, held
+    II-no-worse than the default engine's quick golden by the ci.sh
+    gate).  Not part of the evaluation grid (no ``jobs``); select it with
+    ``compile(..., mapper="pathfinder_window")`` or ``route_window=K`` on
+    any ``PipelineMapper``."""
+
+    route_window = 12

@@ -156,12 +156,22 @@ class MapperStats:
             for k in c:
                 c[k] += getattr(live_cache, k)
         lookups = c["hits_exact"] + c["hits_scoped"] + c["misses"]
+        r = self.route
         cache = {
             **c,
             "hit_rate": (
                 round((c["hits_exact"] + c["hits_scoped"]) / lookups, 4)
                 if lookups else 0.0
             ),
+            # fan-out batching counters (passes.route.FanoutSession): they
+            # ride in the route_cache dict so they reach CompileResult /
+            # `plaid-compile inspect` through the existing artifact field
+            "fanout": {
+                "batches": r.fanout_batches,
+                "edges": r.fanout_edges,
+                "layers_built": r.layers_built,
+                "layers_reused": r.layers_reused,
+            },
         }
         return {
             "route_s": self.route.route_s,

@@ -31,6 +31,13 @@ class RouteStats:
 
     route_s: float = 0.0  # wall time inside route_edge (search + cache)
     calls: int = 0  # route_edge invocations
+    # fan-out batching (passes.route.FanoutSession): queries grouped under a
+    # shared producer context, and entry-cost layer vectors built vs served
+    # from the session cache (reused across consumers and conflict retries)
+    fanout_batches: int = 0
+    fanout_edges: int = 0
+    layers_built: int = 0
+    layers_reused: int = 0
 
 
 _MRRG_GEN = _itertools.count(1)
@@ -70,8 +77,15 @@ class MRRG:
             np.asarray(self.engine.cap, dtype=np.int32), ii
         )
         # base routing cost per slot (1 + history), as a plain list for fast
-        # scalar access in the router's inner loop
+        # scalar access in the router's inner loop plus a numpy mirror for
+        # the array-DP core's per-layer cost vectors (kept bit-equal)
         self._base: List[float] = [1.0] * self.nslots
+        self.base_arr = np.ones(self.nslots, dtype=np.float64)
+        # live same-net reuse index: (net, abs_t) -> rids whose slot holds
+        # that exact value, i.e. the slots a same-net search enters at the
+        # 0.05 fan-out discount; maintained at the same 0->1 / 1->0
+        # refcount transitions as ``state_hash``
+        self.net_slots: Dict[Tuple[int, int], set] = {}
         self._n_over = 0  # slots currently over capacity
         self.fu_busy: Dict[Tuple[int, int], int] = {}  # (fu, cyc) -> node
         self.fu_load: Dict[int, int] = {}  # fu id -> scheduled ops
@@ -111,14 +125,16 @@ class MRRG:
     # -- routing resources ---------------------------------------------------
     # The per-(slot, net) congestion cost — 0.05 for same-value reuse,
     # 1 + history, +8.0 per unit of overuse when allowed — lives inlined in
-    # passes.route._route_edge_once (start layer and relaxation layer); keep
-    # both copies in sync when changing the formula.
+    # passes.route._route_edge_once (start layer and relaxation layer) and,
+    # vectorized, in passes.route.FanoutSession (entry_layer/_entry_cost);
+    # keep every copy in sync when changing the formula.
 
     def reserve(self, net: int, path: Sequence[Tuple[int, int]]):
         ii = self.ii
         sv = self.slot_vals
         cap = self.engine.cap
         ep = self.slot_epoch
+        ns = self.net_slots
         self.epoch = e = self.epoch + 1
         h = self.state_hash
         for rid, t in path:
@@ -133,6 +149,11 @@ class MRRG:
             else:
                 d[key] = 1
                 h ^= mix64(k, net, t)
+                s = ns.get(key)
+                if s is None:
+                    ns[key] = {rid}
+                else:
+                    s.add(rid)
                 l = len(d)
                 self.occ_arr[k] = l
                 if l == cap[rid] + 1:
@@ -144,6 +165,7 @@ class MRRG:
         sv = self.slot_vals
         cap = self.engine.cap
         ep = self.slot_epoch
+        ns = self.net_slots
         self.epoch = e = self.epoch + 1
         h = self.state_hash
         for rid, t in path:
@@ -156,6 +178,11 @@ class MRRG:
                 if d[key] <= 0:
                     del d[key]
                     h ^= mix64(k, net, t)
+                    s = ns.get(key)
+                    if s is not None:
+                        s.discard(rid)
+                        if not s:
+                            del ns[key]
                     l = len(d)
                     self.occ_arr[k] = l
                     if l == cap[rid]:
@@ -183,6 +210,7 @@ class MRRG:
         if len(ks):
             self.hist_arr[ks] += amount
             hist = self.hist_arr
+            self.base_arr[ks] = 1.0 + hist[ks]
             base = self._base
             ep = self.slot_epoch
             self.epoch = e = self.epoch + 1

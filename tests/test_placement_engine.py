@@ -98,7 +98,7 @@ def test_route_cache_exact_tier_and_epoch_invalidation():
     # reserving the cached path touches its slots: the exact tier misses
     # (state hash moved) and the scoped entry is invalidated by epoch
     mrrg.reserve(7, path)
-    key = (mrrg.ii, 7, s.id, d.id, 0, sp, False)
+    key = (mrrg.ii, 7, s.id, d.id, 0, sp, False, None)
     assert cache.lookup(mrrg, key) is ROUTE_MISS
     misses = cache.misses
     # rollback restores the occupancy hash: the exact tier hits again
@@ -119,7 +119,7 @@ def test_route_cache_scoped_tier_survives_disjoint_changes():
     # a reservation on a DIFFERENT resource moves the global state (exact
     # tier misses) but leaves the cached path's slots untouched: scoped hit
     mrrg.reserve(99, [(other, 1)])
-    key = (mrrg.ii, 7, s.id, d.id, 0, sp, False)
+    key = (mrrg.ii, 7, s.id, d.id, 0, sp, False, None)
     hit = cache.lookup(mrrg, key)
     assert hit == r1
     assert cache.hits_scoped == 1 and cache.hits_exact == 0
@@ -143,7 +143,7 @@ def test_route_cache_scoped_tier_rejects_other_mrrg_entries():
     mrrg_b = MRRG(arch, 2)  # fresh fabric: epochs restart
     path, _ = r1
     mrrg_b.reserve(99, path)  # occupy the cached path's slots in B
-    key = (mrrg_b.ii, 7, s.id, d.id, 0, sp, False)
+    key = (mrrg_b.ii, 7, s.id, d.id, 0, sp, False, None)
     assert cache.lookup(mrrg_b, key) is ROUTE_MISS
     assert cache.hits_scoped == 0
 

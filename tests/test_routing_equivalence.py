@@ -84,6 +84,37 @@ def test_full_golden_covers_the_whole_table2_grid():
         assert set(rec) == jobs, key
 
 
+# -- array-DP core vs legacy scalar DP: full-trajectory A/B ------------------
+
+ENGINE_AB_MAPPERS = [
+    ("plaid", HierarchicalMapper, "plaid2x2"),
+    ("st", NodeGreedyMapper, "st4x4"),
+]
+
+
+@pytest.mark.parametrize("name,unroll", QUICK_SET)
+@pytest.mark.parametrize("mkey,mcls,fabric", ENGINE_AB_MAPPERS)
+def test_vectorized_engine_trajectory_matches_legacy(
+    name, unroll, mkey, mcls, fabric, workload_dfg
+):
+    """The array-DP route core must leave the whole mapping trajectory
+    unchanged: at fixed seed and budget, II, placement, schedule and every
+    route are bit-identical with ``route_engine`` forced to the legacy
+    scalar oracle vs the default hybrid dispatch (which exercises the
+    vector core on every long-span search)."""
+    g = workload_dfg(name, unroll)
+    out = {}
+    for eng in ("auto", "legacy"):
+        m = mcls(make_arch(fabric), seed=0, time_budget=500)
+        m.route_engine = eng
+        r = m.map(g)
+        out[eng] = (
+            None if r is None
+            else (r.ii, dict(r.place), dict(r.time), dict(r.routes))
+        )
+    assert out["auto"] == out["legacy"], f"{name}_u{unroll}/{mkey}"
+
+
 def test_full_golden_consistent_with_quick_golden():
     """On the quick slice the full-table record must be no worse than the
     quick golden in every cell (pf cells were collected with the selective
